@@ -1,0 +1,44 @@
+"""Paper Figure 6 + Table 2 analogue: inline vs direct data movement.
+
+Sweeps transfer size over both protocols and reports:
+  * latency (µs) and bandwidth (GiB/s) per size — Fig. 6;
+  * the submit-vs-complete split (dispatch boundary vs engine completion),
+    the analogue of Table 2's Nsight-vs-raw decomposition: ``overhead_pct``
+    is the fraction of end-to-end latency not explained by the payload
+    movement itself (measured at the smallest size as the per-call floor).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.dma import sweep_transfer
+
+EXP_SIZES = [4 * (2 ** i) for i in range(13)]          # 4 B .. 16 KiB
+LIN_SIZES = [1024 * i for i in range(1, 32, 3)]        # 1 KiB .. 31 KiB
+LARGE_SIZES = [32 * 1024, 128 * 1024, 512 * 1024,
+               2 * 2**20, 8 * 2**20, 32 * 2**20]       # Table 2 right half
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    for mode in ("inline", "direct"):
+        sweep = sweep_transfer(EXP_SIZES, mode=mode, iters=10, warmup=3)
+        floor_us = sweep[0]["latency_us"]
+        for r in sweep:
+            overhead = 100.0 * min(1.0, floor_us / max(r["latency_us"], 1e-9))
+            rows.append(
+                f"dma_{mode}_exp,{r['nbytes']},{r['latency_us']:.2f},"
+                f"{r['bandwidth_gib_s']:.3f},{overhead:.1f}")
+    for mode in ("inline", "direct"):
+        for r in sweep_transfer(LIN_SIZES, mode=mode, iters=5, warmup=2):
+            rows.append(
+                f"dma_{mode}_lin,{r['nbytes']},{r['latency_us']:.2f},"
+                f"{r['bandwidth_gib_s']:.3f},")
+    for r in sweep_transfer(LARGE_SIZES, mode="direct", iters=5, warmup=2):
+        rows.append(
+            f"dma_direct_large,{r['nbytes']},{r['latency_us']:.2f},"
+            f"{r['bandwidth_gib_s']:.3f},")
+    return rows
+
+
+HEADER = "name,nbytes,latency_us,bandwidth_gib_s,overhead_pct"

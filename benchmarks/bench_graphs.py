@@ -1,0 +1,47 @@
+"""Paper Figures 7/9/10 analogue: graph-launch scaling across launch modes.
+
+Chain lengths sweep 1→2000 (paper's range).  Per (mode, K):
+  * launch time (µs)  — Fig. 7a/b
+  * command bytes     — Fig. 7c/d (footprint)
+  * doorbell writes   — Fig. 7e/f
+  * fitted command-emission bandwidth (MiB/s) — Fig. 9's slope
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import ExecGraph
+
+CHAINS_SHORT = [1, 10, 25, 50, 100, 200]
+CHAINS_LONG = [500, 1000, 2000]
+MODES = ("per_op", "graphed", "multistep")
+
+
+def run(width: int = 4096) -> List[str]:
+    rows: List[str] = []
+    fits = {m: ([], []) for m in MODES}
+    for K in CHAINS_SHORT + CHAINS_LONG:
+        for mode in MODES:
+            if mode == "per_op" and K > 500:
+                continue  # python-loop dispatch at K=2000 adds no information
+            g = ExecGraph(chain_len=K, width=width)
+            g.upload(mode)
+            _, st = g.launch(mode)       # warm
+            _, st = g.launch(mode)
+            rows.append(
+                f"graph_{mode},{K},{st.launch_s*1e6:.1f},"
+                f"{st.command_bytes},{st.doorbells},{st.upload_s*1e3:.1f}")
+            fits[mode][0].append(st.command_bytes)
+            fits[mode][1].append(st.launch_s)
+    for mode in MODES:
+        b, t = np.asarray(fits[mode][0], float), np.asarray(fits[mode][1], float)
+        if len(b) > 2 and b.std() > 0:
+            slope = np.polyfit(b, t, 1)[0]          # s per byte
+            bw = 1.0 / max(slope, 1e-12) / 2**20    # MiB/s
+            rows.append(f"graph_fit_{mode},,,{bw:.1f},,")
+    return rows
+
+
+HEADER = "name,chain_len,launch_us,command_bytes_or_bw,doorbells,upload_ms"

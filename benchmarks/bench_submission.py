@@ -1,0 +1,73 @@
+"""Submission-cost stage decomposition (paper §6.2/§7).
+
+Splits one end-to-end jitted call into the stages the paper wants
+attributable: trace+lower (driver translate), compile (instantiate),
+dispatch (doorbell), execute (engine).  Also measures the Trainer's
+multi-step launch economy: host µs per train step vs steps-per-dispatch K.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SMOKE_ARCHS
+from repro.configs.shapes import ShapeConfig
+from repro.runtime.trainer import Trainer
+
+
+def _stage_split(width: int = 1024) -> List[str]:
+    W = jnp.zeros((width, width), jnp.float32)
+
+    def f(x):
+        return jnp.tanh(x @ W).sum()
+
+    x = jnp.ones((8, width))
+    t0 = time.perf_counter()
+    lowered = jax.jit(f).lower(x)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    out = compiled(x)                     # dispatch (async)
+    t3 = time.perf_counter()
+    jax.block_until_ready(out)
+    t4 = time.perf_counter()
+    # steady-state dispatch
+    times = []
+    for _ in range(20):
+        s = time.perf_counter()
+        out = compiled(x)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - s)
+    times.sort()
+    return [
+        f"stage_trace_lower,,{(t1-t0)*1e6:.1f},,,",
+        f"stage_compile,,{(t2-t1)*1e6:.1f},,,",
+        f"stage_first_dispatch,,{(t3-t2)*1e6:.1f},,,",
+        f"stage_first_complete,,{(t4-t3)*1e6:.1f},,,",
+        f"stage_steady_call,,{times[len(times)//2]*1e6:.1f},,,",
+    ]
+
+
+def _multistep_economy() -> List[str]:
+    rows = []
+    cfg = SMOKE_ARCHS["deepseek-7b"]
+    shape = ShapeConfig("bench", 64, 4, "train")
+    for k in (1, 4, 16):
+        tr = Trainer(cfg, shape, steps_per_launch=k, seed=0)
+        out = tr.train(16)
+        rows.append(
+            f"trainer_k{k},{out['steps']},"
+            f"{out['wall_s']/out['steps']*1e6:.1f},"
+            f"{out['doorbells']},{out['steps_per_doorbell']:.1f},"
+            f"{out['final_loss']:.4f}")
+    return rows
+
+
+def run() -> List[str]:
+    return _stage_split() + _multistep_economy()
+
+
+HEADER = "name,steps,us_per_step,doorbells,steps_per_doorbell,final_loss"

@@ -1,0 +1,61 @@
+"""Benchmark harness: one section per paper table/figure.
+
+  bench_dma        — Fig. 6 + Table 2 (inline vs direct DMA protocols)
+  bench_graphs     — Fig. 7/9/10 (graph launch scaling, footprint law)
+  bench_submission — §6.2/§7 (stage decomposition, multi-step economy)
+  bench_kernels    — per-kernel interpret-mode sanity timings
+
+Prints ``name,value...`` CSV blocks.  Wall-clock numbers are host (CPU
+container) figures; device-side terms come from the dry-run roofline
+(EXPERIMENTS.md), not from here.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _section(title: str, header: str, rows) -> None:
+    print(f"# === {title} ===")
+    print(header)
+    for r in rows:
+        print(r)
+    sys.stdout.flush()
+
+
+def bench_kernels_rows():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    rows = []
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 256, 4, 64)), jnp.float32)
+    t0 = time.perf_counter()
+    jax.block_until_ready(flash_attention(q, q, q))
+    rows.append(f"flash_attention_interp_256,{(time.perf_counter()-t0)*1e3:.1f}")
+    xh = jnp.asarray(rng.normal(size=(1, 256, 4, 32)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(1, 256, 4))), jnp.float32)
+    A = jnp.asarray(-np.ones(4), jnp.float32)
+    Bc = jnp.asarray(rng.normal(size=(1, 256, 16)), jnp.float32)
+    t0 = time.perf_counter()
+    y, _ = ssd_scan(xh, dt, A, Bc, Bc, chunk=64)
+    jax.block_until_ready(y)
+    rows.append(f"ssd_scan_interp_256,{(time.perf_counter()-t0)*1e3:.1f}")
+    return rows
+
+
+def main() -> None:
+    from . import bench_dma, bench_graphs, bench_submission
+    _section("DMA protocols (Fig.6 / Table 2)", bench_dma.HEADER,
+             bench_dma.run())
+    _section("Graph launch scaling (Fig.7/9/10)", bench_graphs.HEADER,
+             bench_graphs.run())
+    _section("Submission stage split (§6.2/§7)", bench_submission.HEADER,
+             bench_submission.run())
+    _section("Kernel interpret-mode timings", "name,ms", bench_kernels_rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Serving example: batched requests, prefill + multi-token decode launches.
+
+Shows the doorbell economy of multi-token graph launch (the paper's §6.3
+lesson applied to decoding).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import SMOKE_ARCHS
+from repro.runtime.server import Request, Server
+
+
+def main() -> None:
+    cfg = SMOKE_ARCHS["qwen3-8b"]
+
+    def mk():
+        rng = np.random.default_rng(0)   # fresh rng: identical prompts per T
+        return [Request(i, rng.integers(0, cfg.vocab_size, size=6)
+                        .astype(np.int32), max_new_tokens=12)
+                for i in range(4)]
+
+    for T in (1, 4):
+        srv = Server(cfg, batch_size=4, max_seq=64, tokens_per_launch=T,
+                     seed=0)
+        reqs = mk()
+        out = srv.serve(reqs)
+        print(f"tokens_per_launch={T}: {out['new_tokens']} tokens, "
+              f"{out['doorbells']} doorbells "
+              f"({out['tokens_per_doorbell']:.1f} tok/doorbell), "
+              f"wall {out['wall_s']:.2f}s")
+        print("  first request tokens:", reqs[0].tokens)
+
+
+if __name__ == "__main__":
+    main()

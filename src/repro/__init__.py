@@ -1,0 +1,7 @@
+"""repro — command-stream visibility for JAX/TPU training & serving.
+
+Reproduction + multi-pod extension of "Revealing NVIDIA Closed-Source Driver
+Command Streams for CPU-GPU Runtime Behavior Insight" on the JAX/XLA stack.
+See README.md / DESIGN.md / EXPERIMENTS.md.
+"""
+__version__ = "1.0.0"

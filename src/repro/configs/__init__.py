@@ -1,0 +1,47 @@
+"""Assigned architecture configs (exact published values) + smoke variants."""
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import ModelConfig, resolve
+from .shapes import SHAPES, ShapeConfig, applicable, skip_reason
+
+from .jamba_v01_52b import CONFIG as jamba_v01_52b, SMOKE as jamba_smoke
+from .grok_1_314b import CONFIG as grok_1_314b, SMOKE as grok_smoke
+from .qwen2_moe_a2_7b import CONFIG as qwen2_moe_a2_7b, SMOKE as qwen2_moe_smoke
+from .gemma_2b import CONFIG as gemma_2b, SMOKE as gemma_smoke
+from .deepseek_7b import CONFIG as deepseek_7b, SMOKE as deepseek_smoke
+from .llama3_405b import CONFIG as llama3_405b, SMOKE as llama3_smoke
+from .qwen3_8b import CONFIG as qwen3_8b, SMOKE as qwen3_smoke
+from .whisper_medium import CONFIG as whisper_medium, SMOKE as whisper_smoke
+from .mamba2_780m import CONFIG as mamba2_780m, SMOKE as mamba2_smoke
+from .llava_next_34b import CONFIG as llava_next_34b, SMOKE as llava_smoke
+
+ARCHS: Dict[str, ModelConfig] = {
+    "jamba-v0.1-52b": jamba_v01_52b,
+    "grok-1-314b": grok_1_314b,
+    "qwen2-moe-a2.7b": qwen2_moe_a2_7b,
+    "gemma-2b": gemma_2b,
+    "deepseek-7b": deepseek_7b,
+    "llama3-405b": llama3_405b,
+    "qwen3-8b": qwen3_8b,
+    "whisper-medium": whisper_medium,
+    "mamba2-780m": mamba2_780m,
+    "llava-next-34b": llava_next_34b,
+}
+
+SMOKE_ARCHS: Dict[str, ModelConfig] = {
+    "jamba-v0.1-52b": jamba_smoke,
+    "grok-1-314b": grok_smoke,
+    "qwen2-moe-a2.7b": qwen2_moe_smoke,
+    "gemma-2b": gemma_smoke,
+    "deepseek-7b": deepseek_smoke,
+    "llama3-405b": llama3_smoke,
+    "qwen3-8b": qwen3_smoke,
+    "whisper-medium": whisper_smoke,
+    "mamba2-780m": mamba2_smoke,
+    "llava-next-34b": llava_smoke,
+}
+
+__all__ = ["ARCHS", "SMOKE_ARCHS", "SHAPES", "ModelConfig", "ShapeConfig",
+           "applicable", "skip_reason", "resolve"]

@@ -1,0 +1,37 @@
+"""Assigned input shapes (LM-family: seq_len × global_batch)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from .base import ModelConfig
+
+__all__ = ["ShapeConfig", "SHAPES", "applicable", "skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str:
+    """Empty string if the (arch, shape) cell runs; else why it is skipped."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return ("long_500k requires sub-quadratic attention; "
+                f"{cfg.name} is a pure full-attention arch (skip per spec)")
+    return ""
+
+
+def applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    return not skip_reason(cfg, shape)

@@ -1,0 +1,38 @@
+"""Core: the paper's contribution as a first-class JAX subsystem.
+
+Command-stream visibility for the JAX/XLA/TPU stack, adapted from
+"Revealing NVIDIA Closed-Source Driver Command Streams for CPU-GPU Runtime
+Behavior Insight":
+
+* :mod:`repro.core.capture`   — capture at the submission boundary
+* :mod:`repro.core.hlo`       — command-stream reconstruction/decoding
+* :mod:`repro.core.doorbell`  — submission-cycle (dispatch) tracking
+* :mod:`repro.core.dma`       — inline vs direct data-movement protocols
+* :mod:`repro.core.graphs`    — launch modes & the command-footprint law
+* :mod:`repro.core.semaphore` — progress trackers (memory-semaphore analogue)
+* :mod:`repro.core.roofline`  — 3-term roofline from captured streams
+* :mod:`repro.core.report`    — Listing-1-style decoded reports
+"""
+from .capture import CapturedStream, CommandStreamCapture, capture_fn
+from .dma import (HybridMover, INLINE_THRESHOLD_DEFAULT, TransferRecord,
+                  direct_put, inline_put, sweep_transfer)
+from .doorbell import DoorbellRecord, DoorbellTracker, payload_bytes
+from .graphs import LAUNCH_MODES, ExecGraph, LaunchStats, MultiStepLauncher
+from .hlo import COLLECTIVE_OPS, CommandEntry, CommandStream, parse_hlo
+from .report import render_submission, render_roofline_row
+from .roofline import (HW, TPU_V5E, RooflineReport, adjusted, analyze,
+                       attribute, model_flops)
+from .semaphore import Heartbeat, ProgressTracker, SemaphoreToken
+
+__all__ = [
+    "CapturedStream", "CommandStreamCapture", "capture_fn",
+    "HybridMover", "INLINE_THRESHOLD_DEFAULT", "TransferRecord",
+    "direct_put", "inline_put", "sweep_transfer",
+    "DoorbellRecord", "DoorbellTracker", "payload_bytes",
+    "LAUNCH_MODES", "ExecGraph", "LaunchStats", "MultiStepLauncher",
+    "COLLECTIVE_OPS", "CommandEntry", "CommandStream", "parse_hlo",
+    "render_submission", "render_roofline_row",
+    "HW", "TPU_V5E", "RooflineReport", "adjusted", "analyze",
+    "attribute", "model_flops",
+    "Heartbeat", "ProgressTracker", "SemaphoreToken",
+]

@@ -1,0 +1,179 @@
+"""Command-stream capture at the submission boundary.
+
+The paper's watchpoint traps the userspace driver at the exact moment a
+submission is committed (the doorbell write), guaranteeing a complete and
+consistent view of the command stream.  In JAX the submission unit is a
+compiled executable; the commit boundary is ``.lower()``/``.compile()`` and
+each subsequent dispatch.  :class:`CommandStreamCapture` owns that boundary:
+everything that is lowered/compiled through it is recorded — never sampled,
+never partial — together with the compiler's own cost/memory analyses and the
+decoded :class:`~repro.core.hlo.CommandStream`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+
+from . import hlo
+
+__all__ = ["CapturedStream", "CommandStreamCapture", "capture_fn"]
+
+
+def _normalize_cost(cost: Any) -> Dict[str, float]:
+    """jax returns either a dict or a 1-element list of dicts depending on
+    version/backend."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
+@dataclasses.dataclass
+class CapturedStream:
+    """One captured submission unit (≙ one GPFIFO entry + its pushbuffer)."""
+
+    name: str
+    lowered: Any
+    compiled: Any
+    stream: hlo.CommandStream           # decoded command stream
+    cost: Dict[str, float]              # XLA cost_analysis (per-device)
+    memory: Dict[str, int]              # XLA memory_analysis fields
+    lower_time_s: float = 0.0
+    compile_time_s: float = 0.0
+
+    # -- convenience -------------------------------------------------------
+    @property
+    def xla_flops(self) -> float:
+        return float(self.cost.get("flops", 0.0))
+
+    @property
+    def xla_bytes(self) -> float:
+        return float(self.cost.get("bytes accessed", 0.0))
+
+    @property
+    def flops(self) -> int:
+        """Trip-count-weighted FLOPs from the decoded stream (per device)."""
+        return self.stream.total_flops
+
+    @property
+    def memory_bytes(self) -> int:
+        return self.stream.memory_bytes
+
+    @property
+    def collective_link_bytes(self) -> int:
+        return self.stream.collective_link_bytes
+
+    @property
+    def command_bytes(self) -> int:
+        return self.stream.text_bytes
+
+    @property
+    def n_ops(self) -> int:
+        return self.stream.n_ops
+
+    def summary(self) -> Dict[str, Any]:
+        out = dict(self.stream.summary())
+        out.update({
+            "name": self.name,
+            "xla_flops": self.xla_flops,
+            "xla_bytes_accessed": self.xla_bytes,
+            "lower_time_s": round(self.lower_time_s, 4),
+            "compile_time_s": round(self.compile_time_s, 4),
+            **{f"mem_{k}": v for k, v in self.memory.items()},
+        })
+        return out
+
+
+def _memory_analysis_dict(compiled: Any) -> Dict[str, int]:
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if m is None:
+        return {}
+    out: Dict[str, int] = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes"):
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+class CommandStreamCapture:
+    """Owns the lower/compile boundary and records every submission unit.
+
+    Usage::
+
+        cap = CommandStreamCapture()
+        cs = cap.lower_and_compile("train_step", step_fn, args=(specs,),
+                                   in_shardings=..., out_shardings=...)
+        cs.stream.collective_link_bytes   # decoded ICI traffic
+    """
+
+    def __init__(self) -> None:
+        self.captured: Dict[str, CapturedStream] = {}
+
+    def lower_and_compile(
+        self,
+        name: str,
+        fn: Callable,
+        args: Sequence[Any] = (),
+        kwargs: Optional[Dict[str, Any]] = None,
+        in_shardings: Any = None,
+        out_shardings: Any = None,
+        donate_argnums: Sequence[int] = (),
+        static_argnums: Sequence[int] = (),
+        compiler_options: Optional[Dict[str, Any]] = None,
+        keep_lowered_text: bool = False,
+    ) -> CapturedStream:
+        kwargs = kwargs or {}
+        jit_kwargs: Dict[str, Any] = {}
+        if in_shardings is not None:
+            jit_kwargs["in_shardings"] = in_shardings
+        if out_shardings is not None:
+            jit_kwargs["out_shardings"] = out_shardings
+        if donate_argnums:
+            jit_kwargs["donate_argnums"] = tuple(donate_argnums)
+        if static_argnums:
+            jit_kwargs["static_argnums"] = tuple(static_argnums)
+        jitted = jax.jit(fn, **jit_kwargs)
+
+        t0 = time.perf_counter()
+        lowered = jitted.lower(*args, **kwargs)
+        t1 = time.perf_counter()
+        compiled = (lowered.compile(compiler_options=compiler_options)
+                    if compiler_options else lowered.compile())
+        t2 = time.perf_counter()
+
+        text = compiled.as_text()
+        stream = hlo.parse_hlo(text)
+        cost = _normalize_cost(getattr(compiled, "cost_analysis", lambda: {})())
+        memory = _memory_analysis_dict(compiled)
+        cs = CapturedStream(
+            name=name, lowered=lowered if keep_lowered_text else None,
+            compiled=compiled, stream=stream, cost=cost, memory=memory,
+            lower_time_s=t1 - t0, compile_time_s=t2 - t1)
+        self.captured[name] = cs
+        return cs
+
+    def capture_compiled(self, name: str, compiled: Any) -> CapturedStream:
+        """Capture an already-compiled executable (e.g. from elsewhere)."""
+        text = compiled.as_text()
+        cs = CapturedStream(
+            name=name, lowered=None, compiled=compiled,
+            stream=hlo.parse_hlo(text),
+            cost=_normalize_cost(getattr(compiled, "cost_analysis", lambda: {})()),
+            memory=_memory_analysis_dict(compiled))
+        self.captured[name] = cs
+        return cs
+
+
+def capture_fn(fn: Callable, *args, name: str = "fn", **kw) -> CapturedStream:
+    """One-shot convenience wrapper."""
+    return CommandStreamCapture().lower_and_compile(name, fn, args=args, **kw)

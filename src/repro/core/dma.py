@@ -1,0 +1,198 @@
+"""Host→device data-movement protocols: inline vs direct.
+
+The paper's first case study (§6.2) shows the NVIDIA driver silently selects
+between two DMA submission modes for ``cudaMemcpy`` H2D:
+
+* **inline DMA** (<24 KiB): the payload is embedded *in the command stream*
+  and the compute engine materializes it at the destination — ~24 ns startup,
+  saturating at ~17.5 GiB/s, rejected above 31 KiB;
+* **direct DMA** (≥24 KiB): the command only carries src/dst descriptors and
+  a dedicated copy engine moves the bytes — ~500 ns startup, 22 GiB/s.
+
+CUDA exposes no control over the switch.  The paper's §7 contrasts this with
+Open MPI, where protocol thresholds are exposed and tunable.  This module is
+the TPU/JAX adaptation *with the tunable exposed*:
+
+* **inline**: the operand is embedded as an XLA constant inside a compiled
+  executable (it rides in the command stream / program, and the compute path
+  materializes it on device);
+* **direct**: an explicit ``jax.device_put`` transfer (the runtime's copy
+  path carries the bytes, the program only references the buffer).
+
+:class:`HybridMover` selects by size against an explicit, user-settable
+threshold (default 24 KiB, mirroring the paper's observed switch point).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "INLINE_THRESHOLD_DEFAULT",
+    "TransferRecord",
+    "inline_put",
+    "direct_put",
+    "HybridMover",
+    "sweep_transfer",
+]
+
+INLINE_THRESHOLD_DEFAULT = 24 * 1024  # bytes — the paper's observed switch
+
+
+@dataclasses.dataclass
+class TransferRecord:
+    mode: str                  # inline | direct
+    nbytes: int
+    build_s: float             # compile/stage cost (once per shape for inline)
+    submit_s: float            # per-call dispatch cost
+    complete_s: float          # to completion
+    bandwidth_gib_s: float
+
+
+class _InlineCache:
+    """Compiled materializer executables keyed by array fingerprint.
+
+    The inline path embeds the payload as a constant in the executable; the
+    compile is the 'staging' cost (≙ the driver writing payload bytes into
+    the pushbuffer) and each dispatch is the doorbell+engine cost.
+    """
+
+    def __init__(self, maxsize: int = 64) -> None:
+        self._cache: Dict[Any, Any] = {}
+        self._maxsize = maxsize
+
+    def get(self, key: Any) -> Optional[Any]:
+        return self._cache.get(key)
+
+    def put(self, key: Any, compiled: Any) -> None:
+        if len(self._cache) >= self._maxsize:
+            self._cache.pop(next(iter(self._cache)))
+        self._cache[key] = compiled
+
+
+_inline_cache = _InlineCache()
+
+
+def _fingerprint(x: np.ndarray) -> Tuple:
+    # payload identity: shape/dtype + content digest (cheap xxhash-less)
+    return (x.shape, str(x.dtype), hash(x.tobytes()))
+
+
+def inline_put(x: np.ndarray, device: Optional[Any] = None,
+               _cache: bool = True) -> Tuple[jax.Array, TransferRecord]:
+    """Move ``x`` to device via the *inline* protocol.
+
+    The payload is baked into an executable as a constant; dispatching the
+    executable materializes it on device.  Analogous to inline DMA: the data
+    travels inside the command stream and the compute path writes it out.
+    """
+    x = np.asarray(x)
+    key = _fingerprint(x)
+    t0 = time.perf_counter()
+    compiled = _inline_cache.get(key) if _cache else None
+    build_s = 0.0
+    if compiled is None:
+        const = jnp.asarray(x)
+
+        def materialize() -> jax.Array:
+            # +0 forces a real on-device materialization of the constant
+            return const + jnp.zeros((), const.dtype)
+
+        lowered = jax.jit(materialize).lower()
+        compiled = lowered.compile()
+        build_s = time.perf_counter() - t0
+        if _cache:
+            _inline_cache.put(key, compiled)
+    t1 = time.perf_counter()
+    out = compiled()
+    t2 = time.perf_counter()
+    jax.block_until_ready(out)
+    t3 = time.perf_counter()
+    rec = TransferRecord(
+        mode="inline", nbytes=x.nbytes, build_s=build_s,
+        submit_s=t2 - t1, complete_s=t3 - t1,
+        bandwidth_gib_s=x.nbytes / max(t3 - t1, 1e-12) / 2**30)
+    return out, rec
+
+
+def direct_put(x: np.ndarray, device: Optional[Any] = None
+               ) -> Tuple[jax.Array, TransferRecord]:
+    """Move ``x`` to device via the *direct* protocol (explicit transfer)."""
+    x = np.asarray(x)
+    t1 = time.perf_counter()
+    out = jax.device_put(x, device)
+    t2 = time.perf_counter()
+    jax.block_until_ready(out)
+    t3 = time.perf_counter()
+    rec = TransferRecord(
+        mode="direct", nbytes=x.nbytes, build_s=0.0,
+        submit_s=t2 - t1, complete_s=t3 - t1,
+        bandwidth_gib_s=x.nbytes / max(t3 - t1, 1e-12) / 2**30)
+    return out, rec
+
+
+class HybridMover:
+    """Size-switched data movement with an *exposed, tunable* threshold.
+
+    >>> mover = HybridMover(threshold=24 * 1024)
+    >>> y, rec = mover.put(np.ones(128, np.float32))
+    >>> rec.mode
+    'inline'
+    """
+
+    def __init__(self, threshold: int = INLINE_THRESHOLD_DEFAULT,
+                 device: Optional[Any] = None) -> None:
+        self.threshold = int(threshold)
+        self.device = device
+        self.records: List[TransferRecord] = []
+
+    def put(self, x: np.ndarray) -> Tuple[jax.Array, TransferRecord]:
+        x = np.asarray(x)
+        if x.nbytes < self.threshold:
+            out, rec = inline_put(x, self.device)
+        else:
+            out, rec = direct_put(x, self.device)
+        self.records.append(rec)
+        return out, rec
+
+    def stats(self) -> Dict[str, int]:
+        out = {"inline": 0, "direct": 0}
+        for r in self.records:
+            out[r.mode] += 1
+        return out
+
+
+def sweep_transfer(sizes_bytes: List[int], mode: str, iters: int = 20,
+                   warmup: int = 5, dtype=np.uint8) -> List[Dict[str, float]]:
+    """Latency/bandwidth sweep for one protocol — the Figure 6 analogue.
+
+    For the inline path the executable is compiled once per size (staging)
+    and then dispatched repeatedly, so the measured time is the dispatch +
+    materialization cost — the analogue of the paper's controlled command
+    issuance measuring raw engine behaviour without per-call driver work.
+    """
+    results = []
+    put = inline_put if mode == "inline" else direct_put
+    for nbytes in sizes_bytes:
+        n = max(1, nbytes // np.dtype(dtype).itemsize)
+        x = np.arange(n, dtype=np.int64).astype(dtype)
+        for _ in range(warmup):
+            out, _ = put(x)
+            jax.block_until_ready(out)
+        lat = []
+        for _ in range(iters):
+            out, rec = put(x)
+            lat.append(rec.complete_s)
+        lat.sort()
+        med = lat[len(lat) // 2]
+        results.append({
+            "mode": mode, "nbytes": int(x.nbytes),
+            "latency_us": med * 1e6,
+            "bandwidth_gib_s": x.nbytes / max(med, 1e-12) / 2**30,
+        })
+    return results

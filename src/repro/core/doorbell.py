@@ -1,0 +1,121 @@
+"""Doorbell (dispatch) tracking.
+
+In the paper, the doorbell write is the driver's final commit point for a
+submission cycle; counting doorbell writes counts submission cycles, and the
+watchpoint guarantees every one is observed.  On the JAX/PJRT stack the commit
+point of a submission is the dispatch of a compiled executable.
+
+:class:`DoorbellTracker` owns that dispatch boundary: callables wrapped by a
+tracker ring its "doorbell" on every call, recording the submission timestamp,
+the wall time to enqueue (dispatch, async) and optionally to complete, and the
+argument payload bytes.  This is the measurement substrate for the CUDA-Graph
+case study (dispatch counts ≙ doorbell writes) and for the Trainer's
+submission accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+__all__ = ["DoorbellRecord", "DoorbellTracker", "payload_bytes"]
+
+
+def payload_bytes(tree: Any) -> int:
+    """Bytes of array arguments in a pytree (the 'submission payload')."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        nb = getattr(leaf, "nbytes", None)
+        if nb is None:
+            size = getattr(leaf, "size", 1)
+            itemsize = getattr(getattr(leaf, "dtype", None), "itemsize", 4)
+            nb = size * itemsize
+        total += int(nb)
+    return total
+
+
+@dataclasses.dataclass
+class DoorbellRecord:
+    """One submission cycle."""
+
+    seq: int
+    name: str
+    t_submit: float            # perf_counter at dispatch
+    dispatch_s: float          # time to enqueue (returns before completion)
+    complete_s: float          # time to completion (if blocked)
+    payload_bytes: int
+
+
+class DoorbellTracker:
+    """Counts and times submission cycles ("doorbell writes")."""
+
+    def __init__(self) -> None:
+        self.records: List[DoorbellRecord] = []
+        self._seq = 0
+
+    # -- wrapping ----------------------------------------------------------
+    def wrap(self, fn: Callable, name: str = "dispatch",
+             block: bool = False) -> Callable:
+        """Wrap a (compiled/jitted) callable so each call rings the doorbell.
+
+        With ``block=True`` the wrapper waits for completion and records the
+        full duration; otherwise only the (async) dispatch time is recorded —
+        the analogue of the doorbell write returning immediately while the
+        GPU consumes the GPFIFO.
+        """
+        def wrapped(*args, **kwargs):
+            t0 = time.perf_counter()
+            out = fn(*args, **kwargs)
+            t1 = time.perf_counter()
+            complete = 0.0
+            if block:
+                jax.block_until_ready(out)
+                complete = time.perf_counter() - t0
+            self._record(name, t0, t1 - t0, complete,
+                         payload_bytes((args, kwargs)))
+            return out
+        return wrapped
+
+    def ring(self, name: str = "manual", payload: int = 0) -> None:
+        """Explicitly record a submission cycle."""
+        t = time.perf_counter()
+        self._record(name, t, 0.0, 0.0, payload)
+
+    def _record(self, name: str, t0: float, disp: float, comp: float,
+                payload: int) -> None:
+        self.records.append(DoorbellRecord(
+            seq=self._seq, name=name, t_submit=t0, dispatch_s=disp,
+            complete_s=comp, payload_bytes=payload))
+        self._seq += 1
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def count(self) -> int:
+        return len(self.records)
+
+    def count_for(self, name: str) -> int:
+        return sum(1 for r in self.records if r.name == name)
+
+    def total_dispatch_s(self, name: Optional[str] = None) -> float:
+        return sum(r.dispatch_s for r in self.records
+                   if name is None or r.name == name)
+
+    def total_payload(self, name: Optional[str] = None) -> int:
+        return sum(r.payload_bytes for r in self.records
+                   if name is None or r.name == name)
+
+    def reset(self) -> None:
+        self.records.clear()
+        self._seq = 0
+
+    def summary(self) -> Dict[str, Any]:
+        by_name: Dict[str, Dict[str, float]] = {}
+        for r in self.records:
+            d = by_name.setdefault(r.name, {"doorbells": 0, "dispatch_s": 0.0,
+                                            "payload_bytes": 0})
+            d["doorbells"] += 1
+            d["dispatch_s"] += r.dispatch_s
+            d["payload_bytes"] += r.payload_bytes
+        return {"total_doorbells": self.count, "by_name": by_name}

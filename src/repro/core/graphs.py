@@ -1,0 +1,214 @@
+"""Execution graphs: launch modes and the command-footprint law.
+
+The paper's second case study (§6.3) explains CUDA Graph launch scaling with
+two submission-level indicators: the **command footprint** (bytes of commands
+the host emits per launch) and the **number of submission cycles** (doorbell
+writes).  CUDA 11.8 launches a K-kernel chain with K-ish doorbells and a
+footprint linear in K (launch time 1.8 µs → 209 µs over K=1→2000); CUDA 13.0
+uses one doorbell and a near-constant footprint (1.9 µs → 5.9 µs).
+
+This module implements the same experiment — and the same *lesson* — on the
+JAX stack with three launch modes for a chain of K nodes:
+
+* ``per_op``   — one dispatch per node (≙ CUDA 11.8's many submission cycles);
+* ``graphed``  — the chain is compiled into ONE executable, one dispatch, but
+  the command footprint (HLO size) still grows with K (≙ CUDA 13.0);
+* ``multistep``— the chain is rolled into a ``lax.scan``: one dispatch AND an
+  O(1) command footprint (beyond-paper: the footprint law says this is the
+  end point of the optimization the driver was making between 11.8 and 13.0).
+
+The same machinery powers the Trainer's multi-step launcher: train K steps
+per dispatch with O(1) footprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hlo
+from .doorbell import DoorbellTracker
+
+__all__ = ["LaunchStats", "ExecGraph", "MultiStepLauncher", "LAUNCH_MODES"]
+
+LAUNCH_MODES = ("per_op", "graphed", "multistep")
+
+
+@dataclasses.dataclass
+class LaunchStats:
+    """The paper's three indicators for one launch."""
+
+    mode: str
+    chain_len: int
+    doorbells: int             # submission cycles
+    command_bytes: int         # footprint of the compiled stream(s)
+    n_ops: int
+    launch_s: float            # host wall time to submit (excl. completion)
+    complete_s: float          # wall time to completion
+    upload_s: float            # compile ("instantiate+upload") time, once
+
+
+class ExecGraph:
+    """A chain of K identical nodes ``x -> f(scale_k, x)``.
+
+    Mirrors the paper's benchmark graph: a linear chain of identical small
+    kernels (scalar multiply over an N-element array), issued to one stream.
+    """
+
+    def __init__(self, chain_len: int, width: int = 1024,
+                 dtype=jnp.float32) -> None:
+        self.chain_len = int(chain_len)
+        self.width = int(width)
+        self.dtype = dtype
+        self.scales = jnp.linspace(1.0, 1.0 + 1e-6, chain_len).astype(dtype)
+        # pre-staged per-node scale buffers: the per_op path must measure
+        # dispatch cost, not host-side indexing
+        self._scale_list = [self.scales[k] for k in range(chain_len)]
+        self._compiled: Dict[str, Any] = {}
+        self._upload_s: Dict[str, float] = {}
+
+    # -- node ---------------------------------------------------------------
+    @staticmethod
+    def _node(scale: jax.Array, x: jax.Array) -> jax.Array:
+        return x * scale
+
+    def _x0(self) -> jax.Array:
+        return jnp.ones((self.width,), self.dtype)
+
+    # -- instantiate + upload (≙ cudaGraphInstantiate/Upload) ---------------
+    def upload(self, mode: str) -> None:
+        t0 = time.perf_counter()
+        if mode == "per_op":
+            lowered = jax.jit(self._node).lower(
+                jax.ShapeDtypeStruct((), self.dtype),
+                jax.ShapeDtypeStruct((self.width,), self.dtype))
+            self._compiled[mode] = lowered.compile()
+        elif mode == "graphed":
+            # scales are runtime arguments so each node stays a distinct
+            # command in the stream (XLA would constant-fold baked scalars,
+            # which would defeat the footprint measurement)
+            def chain(scales, x):
+                for k in range(self.chain_len):
+                    x = self._node(scales[k], x)
+                return x
+
+            lowered = jax.jit(chain).lower(
+                tuple(jax.ShapeDtypeStruct((), self.dtype)
+                      for _ in range(self.chain_len)),
+                jax.ShapeDtypeStruct((self.width,), self.dtype))
+            self._compiled[mode] = lowered.compile()
+        elif mode == "multistep":
+            def chain(scales, x):
+                def body(c, s):
+                    return self._node(s, c), ()
+                y, _ = jax.lax.scan(body, x, scales)
+                return y
+
+            lowered = jax.jit(chain).lower(
+                jax.ShapeDtypeStruct((self.chain_len,), self.dtype),
+                jax.ShapeDtypeStruct((self.width,), self.dtype))
+            self._compiled[mode] = lowered.compile()
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        self._upload_s[mode] = time.perf_counter() - t0
+
+    def command_footprint(self, mode: str) -> Tuple[int, int]:
+        """(bytes, ops) of command stream submitted per *launch*.
+
+        per_op re-submits its (single-node) stream chain_len times — the
+        total emitted per launch grows with K, like CUDA 11.8's per-kernel
+        command emission.
+        """
+        compiled = self._compiled[mode]
+        text = compiled.as_text()
+        stream = hlo.parse_hlo(text)
+        if mode == "per_op":
+            return stream.text_bytes * self.chain_len, stream.n_ops * self.chain_len
+        return stream.text_bytes, stream.n_ops
+
+    # -- launch (≙ cudaGraphLaunch) ------------------------------------------
+    def launch(self, mode: str, tracker: Optional[DoorbellTracker] = None
+               ) -> Tuple[jax.Array, LaunchStats]:
+        if mode not in self._compiled:
+            self.upload(mode)
+        tracker = tracker or DoorbellTracker()
+        compiled = self._compiled[mode]
+        x = self._x0()
+        jax.block_until_ready(x)
+        cmd_bytes, n_ops = self.command_footprint(mode)
+
+        scale_list = self._scale_list
+        t0 = time.perf_counter()
+        if mode == "per_op":
+            y = x
+            for k in range(self.chain_len):
+                y = compiled(scale_list[k], y)
+                tracker.ring("per_op_dispatch")
+            t1 = time.perf_counter()
+        elif mode == "graphed":
+            y = compiled(tuple(scale_list), x)
+            tracker.ring("graphed_dispatch")
+            t1 = time.perf_counter()
+        else:
+            y = compiled(self.scales, x)
+            tracker.ring("multistep_dispatch")
+            t1 = time.perf_counter()
+        jax.block_until_ready(y)
+        t2 = time.perf_counter()
+
+        doorbells = self.chain_len if mode == "per_op" else 1
+        stats = LaunchStats(
+            mode=mode, chain_len=self.chain_len, doorbells=doorbells,
+            command_bytes=cmd_bytes, n_ops=n_ops,
+            launch_s=t1 - t0, complete_s=t2 - t0,
+            upload_s=self._upload_s.get(mode, 0.0))
+        return y, stats
+
+    def reference(self) -> jax.Array:
+        """Oracle result of the chain."""
+        x = self._x0()
+        import numpy as np
+        return x * np.prod(np.asarray(self.scales, dtype=np.float64)).astype(
+            self.dtype)
+
+
+class MultiStepLauncher:
+    """Train/serve K steps per dispatch — the footprint lesson applied.
+
+    Wraps a ``step(carry, batch) -> carry, aux`` function into a scanned
+    K-step executable.  One doorbell submits K steps; the command footprint
+    is O(1) in K.  This is the production feature distilled from the paper's
+    CUDA-Graph case study.
+    """
+
+    def __init__(self, step_fn: Callable, k: int,
+                 donate_carry: bool = True) -> None:
+        self.k = int(k)
+        self.step_fn = step_fn
+        self._jitted = None
+        self.tracker = DoorbellTracker()
+
+        def k_steps(carry, batches):
+            def body(c, b):
+                c, aux = step_fn(c, b)
+                return c, aux
+            return jax.lax.scan(body, carry, batches)
+
+        self._k_steps = k_steps
+        donate = (0,) if donate_carry else ()
+        self._jitted = jax.jit(k_steps, donate_argnums=donate)
+
+    def __call__(self, carry: Any, batches: Any) -> Tuple[Any, Any]:
+        """``batches`` must be stacked along a leading K axis."""
+        t0 = time.perf_counter()
+        out = self._jitted(carry, batches)
+        self.tracker.ring("multistep_launch")
+        del t0
+        return out
+
+    def lower(self, carry_spec: Any, batches_spec: Any):
+        return self._jitted.lower(carry_spec, batches_spec)

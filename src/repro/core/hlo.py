@@ -1,0 +1,571 @@
+"""HLO command-stream parser — the framework's analogue of the paper's
+pushbuffer reconstruction (Listing 1).
+
+The paper reconstructs NVIDIA pushbuffer command streams by walking from the
+doorbell write back through the GPFIFO entry to the pushbuffer, then decoding
+each method against the open-source headers.  On the JAX/XLA stack the
+"pushbuffer" is the compiled HLO module: the instruction stream the device
+actually consumes.  This module decodes ``compiled.as_text()`` into structured
+:class:`CommandEntry` records and aggregates what the rest of the framework
+needs:
+
+* **trip-count-aware totals** — XLA's ``cost_analysis()`` visits a ``while``
+  body once, so a model that scans over L layers under-reports FLOPs by L×.
+  We recover ``known_trip_count`` from backend_config and weight every
+  instruction by its execution multiplier;
+* **collective traffic** (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute) with op-aware ring link-byte accounting,
+  for the roofline collective term;
+* **command footprint** (serialized size + op count) — the quantity the
+  paper's CUDA-Graph case study shows is the precursor of launch overhead;
+* **engine classification** (MXU-compute / HBM / ICI-collective / host),
+  the analogue of the paper's compute-engine vs copy-engine split.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "CommandEntry",
+    "CommandStream",
+    "parse_hlo",
+    "dtype_bytes",
+    "COLLECTIVE_OPS",
+]
+
+_DTYPE_BYTES: Dict[str, float] = {
+    "pred": 1, "s2": 0.25, "s4": 0.5, "s8": 1, "s16": 2, "s32": 4, "s64": 8,
+    "u2": 0.25, "u4": 0.5, "u8": 1, "u16": 2, "u32": 4, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "f4e2m1fn": 0.5, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+_COMPUTE_OPS = ("dot", "convolution", "cholesky", "triangular-solve", "fft")
+_FREE_OPS = ("parameter", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "opt-barrier")
+_ELEMENTWISE_OPS = (
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "tanh", "exponential", "log", "rsqrt", "sqrt", "negate", "abs", "floor",
+    "ceil", "sign", "cosine", "sine", "logistic", "expm1", "log1p", "erf",
+    "atan2", "remainder", "cbrt", "round-nearest-afz", "round-nearest-even",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.*\{\s*$")
+_INSTR_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=")
+_OPCODE_RE = re.compile(
+    r"=\s*(?:\([^()]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([a-z][a-z0-9\-]*)\s*\(")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"\bcalls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"\bbody=%?([\w.\-]+)")
+_COND_RE = re.compile(r"\bcondition=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"\bto_apply=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([0-9,]+)\]<=\[")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OP_NAME_RE = re.compile(r'op_name="([^"]+)"')
+_FEATURE_GROUP_RE = re.compile(r"feature_group_count=(\d+)")
+
+
+def dtype_bytes(dtype: str) -> float:
+    return _DTYPE_BYTES.get(dtype, 4)
+
+
+def _dims(dim_str: str) -> Tuple[int, ...]:
+    if not dim_str.strip():
+        return ()
+    return tuple(int(d) for d in dim_str.split(","))
+
+
+def _prod(xs) -> int:
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+@dataclasses.dataclass
+class _Shape:
+    dtype: str
+    dims: Tuple[int, ...]
+
+    @property
+    def nbytes(self) -> int:
+        return int(_prod(self.dims) * dtype_bytes(self.dtype))
+
+    @property
+    def nelems(self) -> int:
+        return _prod(self.dims)
+
+
+def _parse_shapes(text: str) -> List[_Shape]:
+    return [_Shape(d, _dims(dims)) for d, dims in _SHAPE_RE.findall(text)]
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    opcode: str
+    result_shapes: List[_Shape]
+    operand_names: List[str]
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return sum(s.nbytes for s in self.result_shapes)
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    is_entry: bool
+    params: Dict[str, List[_Shape]]
+    instrs: List[_Instr]
+    symbols: Dict[str, List[_Shape]]
+
+
+def _classify(opcode: str) -> str:
+    for c in COLLECTIVE_OPS:
+        if opcode.startswith(c):
+            return "collective"
+    for c in _COMPUTE_OPS:
+        if opcode.startswith(c):
+            return "compute"
+    if opcode in ("fusion", "call", "while", "conditional"):
+        return "control"
+    if opcode.startswith(("infeed", "outfeed", "send", "recv")):
+        return "host"
+    if opcode in ("copy", "copy-start", "copy-done", "dynamic-update-slice",
+                  "dynamic-slice", "gather", "scatter", "transpose", "reshape",
+                  "broadcast", "slice", "concatenate", "pad", "reverse",
+                  "iota", "constant"):
+        return "transfer"
+    return "other"
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        if len(dims) >= 2:
+            return max(1, _prod(dims[1:]))
+        return max(1, dims[0])
+    return 1
+
+
+def _link_bytes(opcode: str, result_b: int, operand_b: int, n: int) -> int:
+    """Per-device ICI bytes for a ring realization of the collective."""
+    if n <= 1:
+        return 0
+    frac = (n - 1) / n
+    if opcode.startswith("all-gather"):
+        # async '-start' ops carry (operand, result) tuples; recover the
+        # gathered buffer size before applying the ring fraction.
+        gathered = result_b - operand_b if opcode.endswith("-start") else result_b
+        return int(max(gathered, operand_b) * frac)
+    if opcode.startswith("reduce-scatter"):
+        return int(operand_b * frac)
+    if opcode.startswith("all-reduce"):
+        return int(2 * operand_b * frac)
+    if opcode.startswith(("all-to-all", "ragged-all-to-all")):
+        return int(operand_b * frac)
+    if opcode.startswith(("collective-permute", "collective-broadcast")):
+        return int(operand_b)
+    return int(operand_b * frac)
+
+
+@dataclasses.dataclass
+class CommandEntry:
+    """One decoded executed instruction — one parsed "pushbuffer method"."""
+
+    index: int
+    name: str
+    opcode: str
+    computation: str
+    multiplier: int            # execution count (trip-count product)
+    result_bytes: int
+    operand_bytes: int
+    engine: str                # compute | collective | transfer | control | host | other
+    flops: int = 0             # per single execution
+    group_size: int = 1
+    link_bytes: int = 0        # per single execution, per-device ICI bytes
+    op_path: str = ""          # jax-level op_name metadata (model attribution)
+    raw: str = ""
+
+    def describe(self) -> str:
+        extra = ""
+        if self.engine == "collective":
+            extra = f" groups={self.group_size} link_bytes={self.link_bytes}"
+        if self.flops:
+            extra += f" flops={self.flops}"
+        mult = f" x{self.multiplier}" if self.multiplier != 1 else ""
+        return (f"CS[{self.index:>4d}] {self.opcode:<22s} {self.engine:<10s}"
+                f" out={self.result_bytes}B in={self.operand_bytes}B{extra}{mult}")
+
+
+@dataclasses.dataclass
+class CommandStream:
+    """A fully decoded command stream (one compiled submission unit)."""
+
+    entries: List[CommandEntry]
+    text_bytes: int
+    n_ops: int
+    unknown_trip_counts: bool = False
+
+    # ---- aggregates (all trip-count weighted) ---------------------------
+    @property
+    def total_flops(self) -> int:
+        return sum(e.flops * e.multiplier for e in self.entries)
+
+    @property
+    def memory_bytes(self) -> int:
+        """HBM-traffic proxy: operand+result bytes of every executed
+        top-level instruction (post-fusion boundaries are real memory
+        boundaries)."""
+        return sum((e.result_bytes + e.operand_bytes) * e.multiplier
+                   for e in self.entries
+                   if e.engine not in ("control",) or e.opcode == "fusion")
+
+    @property
+    def collective_entries(self) -> List[CommandEntry]:
+        return [e for e in self.entries if e.engine == "collective"]
+
+    @property
+    def collective_link_bytes(self) -> int:
+        return sum(e.link_bytes * e.multiplier for e in self.collective_entries)
+
+    def collective_bytes_by_op(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.collective_entries:
+            key = e.opcode.replace("-start", "").replace("-done", "")
+            out[key] = out.get(key, 0) + e.link_bytes * e.multiplier
+        return out
+
+    def collective_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.collective_entries:
+            if e.opcode.endswith("-done"):
+                continue
+            key = e.opcode.replace("-start", "")
+            out[key] = out.get(key, 0) + e.multiplier
+        return out
+
+    def counts_by_engine(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.entries:
+            out[e.engine] = out.get(e.engine, 0) + 1
+        return out
+
+    def counts_by_opcode(self, top: int = 0) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.entries:
+            out[e.opcode] = out.get(e.opcode, 0) + 1
+        if top:
+            out = dict(sorted(out.items(), key=lambda kv: -kv[1])[:top])
+        return out
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "n_ops": self.n_ops,
+            "command_bytes": self.text_bytes,
+            "flops": self.total_flops,
+            "memory_bytes": self.memory_bytes,
+            "collective_link_bytes": self.collective_link_bytes,
+            "collectives": self.collective_bytes_by_op(),
+            "collective_counts": self.collective_counts(),
+            "unknown_trip_counts": self.unknown_trip_counts,
+        }
+
+
+def _split_computations(text: str) -> List[_Computation]:
+    comps: List[_Computation] = []
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HEADER_RE.match(stripped)
+            if m:
+                header = stripped
+                params: Dict[str, List[_Shape]] = {}
+                # signature: (name: shape, name: (tuple, shapes), ...)
+                sig = header[header.find("(") + 1:header.rfind("->")]
+                for pm in re.finditer(r"([\w.\-]+):\s*(\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\])", sig):
+                    params[pm.group(1)] = _parse_shapes(pm.group(2))
+                cur = _Computation(
+                    name=m.group(2), is_entry=bool(m.group(1)),
+                    params=params, instrs=[],
+                    symbols={k: v for k, v in params.items()})
+            continue
+        if stripped == "}":
+            comps.append(cur)
+            cur = None
+            continue
+        nm = _INSTR_NAME_RE.match(line)
+        if not nm or "=" not in stripped:
+            continue
+        om = _OPCODE_RE.search(stripped)
+        if not om:
+            continue
+        opcode = om.group(1)
+        name = nm.group(1)
+        eq = stripped.index("=")
+        op_pos = stripped.find(opcode + "(", eq)
+        head = stripped[eq:op_pos] if op_pos > 0 else stripped[eq:]
+        tail = stripped[op_pos:stripped.find(")", op_pos) + 1] if op_pos > 0 else ""
+        result_shapes = _parse_shapes(head)
+        operand_names = _OPERAND_NAME_RE.findall(tail)
+        instr = _Instr(name=name, opcode=opcode, result_shapes=result_shapes,
+                       operand_names=operand_names, line=stripped)
+        cur.instrs.append(instr)
+        cur.symbols[name] = result_shapes
+    return comps
+
+
+def _operand_bytes(instr: _Instr, comp: _Computation) -> int:
+    total = 0
+    for nm in instr.operand_names:
+        shapes = comp.symbols.get(nm)
+        if shapes:
+            total += sum(s.nbytes for s in shapes)
+    return total
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_mem(comp: _Computation, operand_b: List[int], result_b: int
+                ) -> Tuple[int, int]:
+    """(read, write) HBM-byte estimate for a fusion call.
+
+    Dynamic-slice reads and dynamic-update-slice writes fused into a body
+    touch only the slice, not the full (often [L, ...] scan-stacked) buffer
+    — counting full operands over-counts memory traffic by O(L) per step
+    and O(L²) per scan.  Parameters consumed *only* by DS/DUS are therefore
+    charged at slice size; an in-place DUS accumulator charges the update
+    size as the write.
+    """
+    reads = list(operand_b)
+    writes = result_b
+    param_idx: Dict[str, int] = {}
+    for ins in comp.instrs:
+        if ins.opcode == "parameter":
+            m = _PARAM_IDX_RE.search(ins.line)
+            if m:
+                param_idx[ins.name] = int(m.group(1))
+    uses: Dict[str, List[_Instr]] = {}
+    for ins in comp.instrs:
+        if ins.opcode == "parameter":
+            continue
+        for nm in set(ins.operand_names):
+            uses.setdefault(nm, []).append(ins)
+
+    _UNARY = ("convert", "bitcast", "copy", "reshape", "transpose")
+
+    def chase(nm: str, hops: int = 4) -> Tuple[str, List[_Instr]]:
+        """Follow single-use unary chains (convert/bitcast/...) from nm."""
+        us = uses.get(nm, [])
+        while hops and len(us) == 1 and us[0].opcode in _UNARY:
+            nm = us[0].name
+            us = uses.get(nm, [])
+            hops -= 1
+        return nm, us
+
+    for nm, idx in param_idx.items():
+        if idx >= len(reads):
+            continue
+        eff, us = chase(nm)
+        if not us:
+            continue
+        if all(u.opcode == "dynamic-slice" and u.operand_names
+               and u.operand_names[0] == eff for u in us):
+            reads[idx] = sum(u.result_bytes for u in us)
+        elif all(u.opcode == "dynamic-update-slice" and u.operand_names
+                 and u.operand_names[0] == eff for u in us):
+            upd = 0
+            for u in us:
+                if len(u.operand_names) > 1:
+                    upd += sum(s.nbytes for s in
+                               comp.symbols.get(u.operand_names[1], []))
+            reads[idx] = upd
+            if operand_b[idx] == result_b or \
+                    abs(operand_b[idx] - result_b) <= result_b // 2:
+                writes = max(upd, 1)  # in-place accumulator
+    return sum(reads), writes
+
+
+def _dot_flops(instr: _Instr, comp: _Computation) -> int:
+    out = sum(s.nelems for s in instr.result_shapes)
+    m = _LHS_CONTRACT_RE.search(instr.line)
+    contract = 1
+    if m and instr.operand_names:
+        lhs = comp.symbols.get(instr.operand_names[0])
+        if lhs and m.group(1).strip():
+            dims = lhs[0].dims
+            for ci in m.group(1).split(","):
+                ci = int(ci)
+                if ci < len(dims):
+                    contract *= dims[ci]
+    return 2 * out * contract
+
+
+def _conv_flops(instr: _Instr, comp: _Computation) -> int:
+    out = sum(s.nelems for s in instr.result_shapes)
+    kern_elems = 0
+    if len(instr.operand_names) >= 2:
+        k = comp.symbols.get(instr.operand_names[1])
+        if k:
+            kern_elems = k[0].nelems
+    fg = 1
+    m = _FEATURE_GROUP_RE.search(instr.line)
+    if m:
+        fg = int(m.group(1))
+    # per output element: 2 * (kernel elems per output channel)
+    out_ch = max(1, instr.result_shapes[0].dims[-1] if instr.result_shapes[0].dims else 1)
+    per_out = max(1, kern_elems // max(1, out_ch)) if kern_elems else 1
+    del fg
+    return 2 * out * per_out
+
+
+def parse_hlo(text: str) -> CommandStream:
+    """Decode an HLO module dump into a :class:`CommandStream`.
+
+    Use on ``compiled.as_text()`` (post-SPMD, per-device shapes, scheduled).
+    Collectives, FLOPs and memory bytes are weighted by ``known_trip_count``
+    execution multipliers so scanned (``lax.scan``) layer stacks are counted
+    correctly — XLA's own ``cost_analysis`` does not do this.
+    """
+    comps = {c.name: c for c in _split_computations(text)}
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    entries: List[CommandEntry] = []
+    unknown_trips = False
+    idx = 0
+
+    def fusion_flops(comp: _Computation, mult: int, seen: set) -> int:
+        """FLOPs contributed by instructions inside a fusion/call body."""
+        if comp.name in seen:
+            return 0
+        seen.add(comp.name)
+        fl = 0
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                fl += _dot_flops(ins, comp)
+            elif ins.opcode == "convolution":
+                fl += _conv_flops(ins, comp)
+            elif ins.opcode in _ELEMENTWISE_OPS or ins.opcode in ("compare", "select", "clamp"):
+                fl += sum(s.nelems for s in ins.result_shapes)
+            elif ins.opcode in ("reduce", "reduce-window"):
+                fl += sum(sum(s.nelems for s in comp.symbols.get(nm, []))
+                          for nm in ins.operand_names[:1])
+            cm = _CALLS_RE.search(ins.line)
+            if cm and cm.group(1) in comps:
+                fl += fusion_flops(comps[cm.group(1)], 1, seen)
+        return fl
+
+    def walk(comp: _Computation, mult: int, depth: int = 0):
+        nonlocal idx, unknown_trips
+        if depth > 32:
+            return
+        for ins in comp.instrs:
+            if ins.opcode in _FREE_OPS or ins.opcode == "constant":
+                continue
+            if ins.opcode == "while":
+                tm = _TRIP_RE.search(ins.line)
+                trips = int(tm.group(1)) if tm else 1
+                if not tm:
+                    unknown_trips = True
+                bm = _BODY_RE.search(ins.line)
+                cm_ = _COND_RE.search(ins.line)
+                if bm and bm.group(1) in comps:
+                    walk(comps[bm.group(1)], mult * trips, depth + 1)
+                if cm_ and cm_.group(1) in comps:
+                    # condition is cheap; count once per trip for op stats
+                    pass
+                continue
+            if ins.opcode == "conditional":
+                bm = _BRANCHES_RE.search(ins.line)
+                if bm:
+                    for bname in _OPERAND_NAME_RE.findall(bm.group(1)):
+                        if bname in comps:
+                            walk(comps[bname], mult, depth + 1)
+                continue
+            if ins.opcode == "call":
+                cm = _CALLS_RE.search(ins.line) or _TO_APPLY_RE.search(ins.line)
+                if cm and cm.group(1) in comps:
+                    walk(comps[cm.group(1)], mult, depth + 1)
+                continue
+
+            opr_b = _operand_bytes(ins, comp)
+            res_b = ins.result_bytes
+            engine = _classify(ins.opcode)
+            flops = 0
+            if ins.opcode == "dot":
+                flops = _dot_flops(ins, comp)
+            elif ins.opcode == "convolution":
+                flops = _conv_flops(ins, comp)
+            elif ins.opcode == "dynamic-slice":
+                # in-place read of just the slice
+                opr_b = res_b
+            elif ins.opcode == "dynamic-update-slice":
+                upd = (sum(s.nbytes for s in
+                           comp.symbols.get(ins.operand_names[1], []))
+                       if len(ins.operand_names) > 1 else res_b)
+                opr_b = upd
+                res_b = upd  # aliased in-place write
+            elif ins.opcode == "fusion":
+                cm = _CALLS_RE.search(ins.line)
+                if cm and cm.group(1) in comps:
+                    body = comps[cm.group(1)]
+                    flops = fusion_flops(body, mult, set())
+                    per_op = [sum(s.nbytes for s in comp.symbols.get(nm, []))
+                              for nm in ins.operand_names]
+                    opr_b, res_b = _fusion_mem(body, per_op, res_b)
+                engine = "fusion"
+            elif ins.opcode in _ELEMENTWISE_OPS or ins.opcode in ("compare", "select", "clamp"):
+                flops = sum(s.nelems for s in ins.result_shapes)
+            elif ins.opcode in ("reduce", "reduce-window", "sort"):
+                flops = opr_b and sum(
+                    sum(s.nelems for s in comp.symbols.get(nm, []))
+                    for nm in ins.operand_names[:1]) or 0
+
+            gs = 1
+            lb = 0
+            if engine == "collective":
+                gs = _group_size(ins.line)
+                if ins.opcode.endswith("-done"):
+                    lb = 0
+                else:
+                    lb = _link_bytes(ins.opcode, res_b, opr_b, gs)
+            opm = _OP_NAME_RE.search(ins.line)
+            entries.append(CommandEntry(
+                index=idx, name=ins.name, opcode=ins.opcode,
+                computation=comp.name, multiplier=mult,
+                result_bytes=res_b, operand_bytes=opr_b, engine=engine,
+                flops=flops, group_size=gs, link_bytes=lb,
+                op_path=opm.group(1) if opm else "", raw=ins.line[:240]))
+            idx += 1
+
+    if entry is not None:
+        walk(entry, 1)
+    return CommandStream(entries=entries, text_bytes=len(text),
+                         n_ops=len(entries), unknown_trip_counts=unknown_trips)

@@ -1,0 +1,78 @@
+"""Listing-1-style decoded submission reports.
+
+The paper's Listing 1 shows a captured doorbell interception: the GPFIFO
+summary (GET/PUT indices, base, new entry) followed by decoded pushbuffer
+entries.  This module renders the equivalent for a captured JAX submission
+unit: the submission summary (executable fingerprint, footprint, dispatch
+stats) followed by decoded command-stream entries with engine attribution.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from .capture import CapturedStream
+from .doorbell import DoorbellTracker
+
+__all__ = ["render_submission", "render_roofline_row"]
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024 or unit == "TiB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024
+    return f"{n:.1f}TiB"
+
+
+def render_submission(cs: CapturedStream,
+                      tracker: Optional[DoorbellTracker] = None,
+                      max_entries: int = 40) -> str:
+    """Render a captured stream like the paper's Listing 1."""
+    lines = []
+    lines.append(f"Submission captured: {cs.name}")
+    lines.append("==== SUBMISSION SUMMARY ====")
+    fp = getattr(cs.compiled, "runtime_executable", None)
+    lines.append(f"executable        {type(cs.compiled).__name__}"
+                 f"@{hex(id(cs.compiled))}")
+    del fp
+    lines.append(f"command footprint {_fmt_bytes(cs.command_bytes)} "
+                 f"({cs.n_ops} decoded entries)")
+    lines.append(f"lower/compile     {cs.lower_time_s*1e3:.1f} ms / "
+                 f"{cs.compile_time_s*1e3:.1f} ms")
+    if cs.memory:
+        arg = cs.memory.get("argument_size_in_bytes", 0)
+        out = cs.memory.get("output_size_in_bytes", 0)
+        tmp = cs.memory.get("temp_size_in_bytes", 0)
+        code = cs.memory.get("generated_code_size_in_bytes", 0)
+        lines.append(f"memory            args={_fmt_bytes(arg)} "
+                     f"out={_fmt_bytes(out)} temp={_fmt_bytes(tmp)} "
+                     f"code={_fmt_bytes(code)}")
+    lines.append(f"flops/device      {cs.flops:.3e} "
+                 f"(xla cost_analysis: {cs.xla_flops:.3e})")
+    lines.append(f"hbm bytes/device  {_fmt_bytes(cs.memory_bytes)}")
+    lines.append(f"ici bytes/device  {_fmt_bytes(cs.collective_link_bytes)}")
+    colls = cs.stream.collective_bytes_by_op()
+    if colls:
+        lines.append("collective breakdown:")
+        for op, b in sorted(colls.items(), key=lambda kv: -kv[1]):
+            n = cs.stream.collective_counts().get(op, 0)
+            lines.append(f"  {op:<22s} x{n:<6d} {_fmt_bytes(b)}")
+    if tracker is not None:
+        lines.append(f"doorbell writes   {tracker.count}")
+    lines.append("==== END SUBMISSION SUMMARY ====")
+    lines.append(f"Command-stream entries: {cs.n_ops}"
+                 + (f" (showing first {max_entries})"
+                    if cs.n_ops > max_entries else ""))
+    for e in cs.stream.entries[:max_entries]:
+        lines.append("  " + e.describe())
+    if cs.n_ops > max_entries:
+        lines.append(f"  ... {cs.n_ops - max_entries} more")
+    return "\n".join(lines)
+
+
+def render_roofline_row(rep: Any) -> str:
+    """One fixed-width roofline table row."""
+    return (f"{rep.name:<44s} {rep.chips:>5d} "
+            f"{rep.compute_s*1e3:>10.3f} {rep.memory_s*1e3:>10.3f} "
+            f"{rep.collective_s*1e3:>10.3f} {rep.bottleneck:<10s} "
+            f"{rep.model_flops_ratio:>6.3f} {rep.roofline_fraction:>6.3f}")

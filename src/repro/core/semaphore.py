@@ -1,0 +1,134 @@
+"""Progress trackers — the memory-semaphore analogue.
+
+The paper (§4.3) describes NVIDIA's *memory semaphore*: the driver appends a
+semaphore-release command (target address + payload) after a submitted
+sequence; the payload appearing at the address proves everything before it
+completed, and an optional timestamp gives device-side timing.  The paper's
+controlled DMA benchmark (§6.2) brackets a command sequence between two
+trackers and subtracts their timestamps.
+
+On JAX the completion fence is ``block_until_ready`` on an output buffer.
+:class:`ProgressTracker` reproduces the semaphore *protocol*: ``release()``
+appends a marker to a submission, ``wait()`` fences on it and records the
+completion timestamp; ``elapsed()`` between two releases is the analogue of
+``cudaEventElapsedTime``.  :class:`Heartbeat` builds the fault-tolerance
+liveness signal on top (see ``runtime/fault_tolerance.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SemaphoreToken", "ProgressTracker", "Heartbeat"]
+
+
+@dataclasses.dataclass
+class SemaphoreToken:
+    """One semaphore release: (payload, fence buffer, timestamps)."""
+
+    payload: int
+    fence: Any                 # the device buffer acting as the semaphore
+    t_release: float           # host time when the release was submitted
+    t_complete: Optional[float] = None
+
+    @property
+    def completed(self) -> bool:
+        return self.t_complete is not None
+
+
+class ProgressTracker:
+    """Semaphore-release/wait protocol over JAX buffers."""
+
+    def __init__(self) -> None:
+        self._next_payload = 1
+        self.tokens: List[SemaphoreToken] = []
+
+    def release(self, tied_to: Any) -> SemaphoreToken:
+        """Append a release after ``tied_to`` (any pytree of device arrays).
+
+        The fence value is data-dependent on ``tied_to`` so its readiness
+        implies completion of everything that produced ``tied_to`` — the same
+        in-order guarantee the hardware semaphore gives within a channel.
+        """
+        payload = self._next_payload
+        self._next_payload += 1
+        leaves = [l for l in jax.tree_util.tree_leaves(tied_to)
+                  if hasattr(l, "dtype")]
+        if leaves:
+            x = leaves[0]
+            zero = (x.ravel()[0] * 0).astype(jnp.int32) if x.size else jnp.int32(0)
+            fence = zero + jnp.int32(payload)
+        else:
+            fence = jnp.int32(payload)
+        tok = SemaphoreToken(payload=payload, fence=fence,
+                             t_release=time.perf_counter())
+        self.tokens.append(tok)
+        return tok
+
+    def wait(self, token: SemaphoreToken) -> float:
+        """Block until the semaphore value lands; record its timestamp."""
+        val = int(jax.block_until_ready(token.fence))
+        if val != token.payload:
+            raise RuntimeError(
+                f"semaphore payload mismatch: expected {token.payload}, "
+                f"observed {val}")
+        token.t_complete = time.perf_counter()
+        return token.t_complete
+
+    def elapsed(self, a: SemaphoreToken, b: SemaphoreToken) -> float:
+        """Elapsed completion-to-completion time between two releases."""
+        if not a.completed:
+            self.wait(a)
+        if not b.completed:
+            self.wait(b)
+        return abs(b.t_complete - a.t_complete)
+
+
+class Heartbeat:
+    """Liveness/straggler signal built on progress completions.
+
+    Each worker (host, or simulated worker) beats when its step's progress
+    tracker completes; ``stragglers()`` flags workers whose most recent beat
+    lags the median by more than ``factor``× the median inter-beat interval.
+    """
+
+    def __init__(self, n_workers: int, factor: float = 3.0) -> None:
+        self.n_workers = int(n_workers)
+        self.factor = float(factor)
+        self.last_beat: Dict[int, float] = {}
+        self.intervals: Dict[int, List[float]] = {i: [] for i in range(n_workers)}
+
+    def beat(self, worker: int, t: Optional[float] = None) -> None:
+        t = time.perf_counter() if t is None else t
+        prev = self.last_beat.get(worker)
+        if prev is not None:
+            self.intervals[worker].append(t - prev)
+        self.last_beat[worker] = t
+
+    def _median_interval(self) -> float:
+        allint = sorted(x for xs in self.intervals.values() for x in xs)
+        if not allint:
+            return 0.0
+        return allint[len(allint) // 2]
+
+    def stragglers(self, now: Optional[float] = None) -> List[int]:
+        now = time.perf_counter() if now is None else now
+        med = self._median_interval()
+        if med <= 0:
+            return []
+        out = []
+        for w in range(self.n_workers):
+            last = self.last_beat.get(w)
+            if last is None or (now - last) > self.factor * med:
+                out.append(w)
+        return out
+
+    def dead(self, timeout_s: float, now: Optional[float] = None) -> List[int]:
+        now = time.perf_counter() if now is None else now
+        return [w for w in range(self.n_workers)
+                if self.last_beat.get(w) is None
+                or (now - self.last_beat[w]) > timeout_s]

@@ -1,0 +1,3 @@
+from .pipeline import Prefetcher, SyntheticTokens, make_pipeline
+
+__all__ = ["Prefetcher", "SyntheticTokens", "make_pipeline"]

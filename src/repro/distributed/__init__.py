@@ -1,0 +1,3 @@
+from .sharding import ShardingRules, dp_axes, mesh_axis_size
+
+__all__ = ["ShardingRules", "dp_axes", "mesh_axis_size"]

@@ -1,0 +1,28 @@
+"""Ambient mesh context for model-internal shard_map blocks.
+
+Model code (e.g. the shard_map MoE) needs the active mesh + data-parallel
+axis names; launchers set them here.  Kept explicit (not jax's global mesh)
+so models stay traceable without a mesh for single-device tests.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+_MESH = None
+_DP_AXES: Tuple[str, ...] = ()
+
+__all__ = ["set_mesh", "get_mesh", "dp_axes_active"]
+
+
+def set_mesh(mesh, dp_axes: Tuple[str, ...]) -> None:
+    global _MESH, _DP_AXES
+    _MESH = mesh
+    _DP_AXES = tuple(dp_axes)
+
+
+def get_mesh():
+    return _MESH
+
+
+def dp_axes_active() -> Tuple[str, ...]:
+    return _DP_AXES

@@ -1,0 +1,317 @@
+"""Pipeline-parallel decode for dense LMs (shard_map: PP × TP × SP-KV).
+
+The FSDP decode baseline must all-gather every weight shard once per token
+(47 GB/device/token for llama3-405b — the dominant collective term of the
+decode_32k cell).  Pipelining layers over the 'data' axis makes the weights
+STATIONARY: each of the 16 stages holds L/16 layers TP-sharded over 'model',
+activations [µb,1,D] hop stage→stage via collective-permute (256 KB vs 47 GB).
+
+The schedule is the *steady-state circular* pipeline: one launch = n_stages
+ticks; tick t has stage s serving microbatch (t−s) mod n_µb, so every stage
+is busy every tick — zero bubble.  Microbatches with t < s are still
+carrying the PREVIOUS launch's token (pipeline lag = n_stages−1 ticks): the
+activation wire and the per-µb token-position offset are part of the decode
+state, and logits emerge with that lag, exactly like a production decode
+pipeline (per-sequence latency = pipeline depth, throughput = bubble-free).
+
+Inside a stage everything is manual TP over 'model':
+  * Q heads sharded; KV heads replicated (kv < tp), each device's Q-head
+    block maps to a single KV group (requires (H/hk) % (H/tp) == 0);
+  * KV cache sequence-sharded over 'model'; the new token's K/V is written
+    only by the shard owning the in-flight position (masked in-place update);
+  * attention is flash-decoding: local partial softmax over the owned
+    sequence slice, combined with pmax/psum over 'model';
+  * o-proj / MLP down-proj produce partials → psum over 'model';
+  * embed/unembed are vocab-sharded: masked local lookup + psum.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..models.layers import apply_rope, rms_norm, rotary
+
+__all__ = ["PPDecoder"]
+
+NEG = float(jnp.finfo(jnp.float32).min)
+
+
+@dataclasses.dataclass
+class PPDecoder:
+    """Builds the shard_map'd steady-state decode step for a dense LM."""
+
+    cfg: ModelConfig
+    mesh: Mesh
+    stage_axis: str = "data"
+    tp_axis: str = "model"
+    tokens_per_launch: int = 1   # T: tokens scored per launch (amortizes the
+                                 # per-tick weight stream T× — §Perf)
+
+    def __post_init__(self) -> None:
+        cfg = self.cfg
+        assert cfg.family in ("dense", "vlm"), "PP decode targets dense LMs"
+        self.n_stages = int(self.mesh.shape[self.stage_axis])
+        self.tp = int(self.mesh.shape[self.tp_axis])
+        self.layers_per_stage = -(-cfg.n_layers // self.n_stages)
+        self.n_virtual = self.layers_per_stage * self.n_stages
+        h_loc = cfg.n_heads_padded // self.tp
+        n_rep = cfg.n_heads_padded // cfg.n_kv_heads
+        assert n_rep % h_loc == 0 or h_loc % n_rep == 0, \
+            "local Q-head block must map to one KV group"
+
+    # ------------------------------------------------------------------
+    def init_params(self, key: jax.Array) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        from ..models.layers import init_embedding, init_rms_norm
+        from ..models.transformer import init_block
+        keys = jax.random.split(key, self.n_virtual)
+        layers = jax.vmap(lambda k: init_block(k, cfg, dtype))(keys)
+        layers = jax.tree_util.tree_map(
+            lambda a: a.reshape((self.n_stages, self.layers_per_stage)
+                                + a.shape[1:]), layers)
+        k_emb, _ = jax.random.split(key)
+        return {
+            "emb": init_embedding(k_emb, cfg.vocab_padded, cfg.d_model,
+                                  dtype, cfg.tie_embeddings),
+            "layers": layers,
+            "final_norm": init_rms_norm(cfg.d_model, dtype),
+            "valid": (jnp.arange(self.n_virtual) < cfg.n_layers).reshape(
+                self.n_stages, self.layers_per_stage),
+        }
+
+    def init_state(self, batch: int, max_seq: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        shape = (self.n_stages, self.layers_per_stage, batch, max_seq,
+                 cfg.n_kv_heads, cfg.hd)
+        wire = (self.n_stages, batch // self.n_stages,
+                self.tokens_per_launch, cfg.d_model)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "wire": jnp.zeros(wire, dtype),
+                "length": jnp.zeros((), jnp.int32)}
+
+    # ------------------------------------------------------------------
+    def param_specs(self):
+        sa, ta = self.stage_axis, self.tp_axis
+
+        def spec(path, leaf):
+            keys = [str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path]
+            name = keys[-1] if keys else ""
+            nd = len(leaf.shape)
+            if keys and keys[0] == "layers":
+                if name == "wq":
+                    return P(sa, None, None, ta, None)
+                if name in ("wk", "wv"):
+                    return P(sa, None, None, None, None)
+                if name == "wo":
+                    return P(sa, None, ta, None, None)
+                if name in ("w_gate", "w_up"):
+                    return P(sa, None, None, ta)
+                if name == "w_down":
+                    return P(sa, None, ta, None)
+                return P(*([sa] + [None] * (nd - 1)))
+            if keys and keys[0] == "emb":
+                return P(ta, None) if name == "embed" else P(None, ta)
+            if keys and keys[0] == "valid":
+                return P(sa, None)
+            return P()
+
+        return jax.tree_util.tree_map_with_path(
+            spec, jax.eval_shape(
+                lambda: self.init_params(jax.random.PRNGKey(0))))
+
+    def state_specs(self):
+        sa, ta = self.stage_axis, self.tp_axis
+        return {"k": P(sa, None, None, ta, None, None),
+                "v": P(sa, None, None, ta, None, None),
+                "wire": P(sa, None, None, None),
+                "length": P()}
+
+    # ------------------------------------------------------------------
+    def make_step(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        sa, ta = self.stage_axis, self.tp_axis
+        n_stages, tp = self.n_stages, self.tp
+        n_micro = n_stages
+        lps = self.layers_per_stage
+        T = self.tokens_per_launch
+        assert batch % n_micro == 0
+        mb = batch // n_micro
+        seq_loc = max_seq // tp
+        h_loc = cfg.n_heads_padded // tp
+        hk, hd, D = cfg.n_kv_heads, cfg.hd, cfg.d_model
+        n_rep = cfg.n_heads_padded // hk
+        v_loc = cfg.vocab_padded // tp
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+
+        def embed_local(emb, ids, t_idx):
+            off = t_idx * v_loc
+            local = jnp.clip(ids - off, 0, v_loc - 1)
+            rows = jnp.take(emb, local, axis=0)
+            ok = (ids >= off) & (ids < off + v_loc)
+            return jax.lax.psum(jnp.where(ok[..., None], rows, 0), ta)
+
+        def layer_decode(lp, valid, x, k_c, v_c, pos_tok, t_idx):
+            """x: [mb,T,D] (a T-token segment, causal via write-then-score);
+            k_c/v_c: [mb, seq_loc, hk, hd] (local sequence slice)."""
+            ap = lp["attn"]
+            h = rms_norm(lp["ln1"], x)
+            q = jnp.einsum("bsd,dhk->bshk", h, ap["wq"])       # h_loc heads
+            k_new = jnp.einsum("bsd,dhk->bshk", h, ap["wk"])   # hk heads
+            v_new = jnp.einsum("bsd,dhk->bshk", h, ap["wv"])
+            if cfg.qk_norm:
+                q = rms_norm(ap["q_norm"], q)
+                k_new = rms_norm(ap["k_norm"], k_new)
+            positions = pos_tok + jnp.arange(T)
+            if cfg.pos_embed == "rope":
+                sin, cos = rotary(positions[None], hd, cfg.rope_theta)
+                q = apply_rope(q, sin, cos)
+                k_new = apply_rope(k_new, sin, cos)
+            # ---- masked seq-sharded cache writes (one row per token) -----
+            # write-then-score keeps intra-segment causality: token j's row
+            # is in the cache before any token scores it, and token j's own
+            # position mask hides rows > pos_tok+j.
+            for j in range(T):
+                pj = pos_tok + j
+                owner = ((pj // seq_loc) == t_idx) & valid
+                p_loc = pj % seq_loc
+                k_row = jax.lax.dynamic_slice(k_c, (0, p_loc, 0, 0),
+                                              (mb, 1, hk, hd))
+                v_row = jax.lax.dynamic_slice(v_c, (0, p_loc, 0, 0),
+                                              (mb, 1, hk, hd))
+                k_c = jax.lax.dynamic_update_slice(
+                    k_c, jnp.where(owner, k_new[:, j:j + 1].astype(k_c.dtype),
+                                   k_row), (0, p_loc, 0, 0))
+                v_c = jax.lax.dynamic_update_slice(
+                    v_c, jnp.where(owner, v_new[:, j:j + 1].astype(v_c.dtype),
+                                   v_row), (0, p_loc, 0, 0))
+            # ---- flash-decoding over the local sequence slice ------------
+            # the tp axis partitions the SEQUENCE inside attention: gather
+            # the (tiny) q so every device scores ALL heads over its slice,
+            # then combine per head across slices with pmax/psum and slice
+            # back to the local head block for the o-proj partial.
+            # KV is read in bf16 with fp32 MXU accumulation — converting the
+            # cache to fp32 would double its HBM traffic.
+            q_all = jax.lax.all_gather(q, ta, axis=2, tiled=True)
+            qf = q_all.reshape(mb, T, hk, n_rep, hd).astype(k_c.dtype)
+            s = jnp.einsum("btgrd,bsgd->btgrs", qf, k_c,
+                           preferred_element_type=jnp.float32) * (hd ** -0.5)
+            gpos = t_idx * seq_loc + jnp.arange(seq_loc)
+            tmask = gpos[None, :] <= positions[:, None]        # [T, seq_loc]
+            s = jnp.where(tmask[None, :, None, None, :], s, NEG)
+            m_loc = jnp.max(s, axis=-1)
+            m_glob = jax.lax.pmax(m_loc, ta)
+            p_ = jnp.exp(s - m_glob[..., None])
+            l_glob = jax.lax.psum(jnp.sum(p_, axis=-1), ta)
+            acc = jax.lax.psum(
+                jnp.einsum("btgrs,bsgd->btgrd", p_.astype(k_c.dtype), v_c,
+                           preferred_element_type=jnp.float32), ta)
+            out = (acc / jnp.maximum(l_glob, 1e-30)[..., None])
+            out = out.reshape(mb, T, cfg.n_heads_padded, hd)
+            out = jax.lax.dynamic_slice(
+                out, (0, 0, t_idx * h_loc, 0), (mb, T, h_loc, hd))
+            out = out.astype(x.dtype)                          # [mb,T,h_loc,hd]
+            attn = jax.lax.psum(
+                jnp.einsum("bshk,hkd->bsd", out, ap["wo"]), ta)
+            x = x + jnp.where(valid, attn, 0).astype(x.dtype)
+            # ---- MLP ----------------------------------------------------
+            h2 = rms_norm(lp["ln2"], x)
+            mp = lp["mlp"]
+            m = (act(h2 @ mp["w_gate"]) * (h2 @ mp["w_up"])) @ mp["w_down"]
+            m = jax.lax.psum(m, ta)
+            x = x + jnp.where(valid, m, 0).astype(x.dtype)
+            return x, k_c, v_c
+
+        def stage_fn(params, kv_k, kv_v, wire, length, tokens):
+            s_idx = jax.lax.axis_index(sa)
+            t_idx = jax.lax.axis_index(ta)
+            # drop the local stage dim (block size 1 along the stage axis)
+            layers = jax.tree_util.tree_map(lambda a: a[0], params["layers"])
+            valid_l = params["valid"][0]
+            kv_k = kv_k[0]
+            kv_v = kv_v[0]
+            emb = params["emb"]["embed"]
+            unemb = params["emb"].get("unembed")
+            logits_acc = jnp.zeros((n_micro, mb, T, v_loc), jnp.float32)
+            x_wire = wire[0]                                   # [mb,1,D] local
+
+            def tick(carry, t):
+                x_wire, kv_k, kv_v, logits_acc = carry
+                mb_idx = (t - s_idx) % n_micro
+                # µbatches that wrapped (t < s) still carry the previous
+                # launch's T-token segment
+                pos_tok = length - T * (t < s_idx).astype(jnp.int32)
+                toks = jax.lax.dynamic_slice(
+                    tokens, (mb_idx * mb, 0), (mb, T))
+                x0 = embed_local(emb, toks, t_idx).astype(x_wire.dtype)
+                if cfg.embed_scale:
+                    x0 = x0 * jnp.asarray(D ** 0.5, x0.dtype)
+                x = jnp.where(s_idx == 0, x0, x_wire)
+
+                def one_layer(l, carry):
+                    # fori_loop with in-place DUS: scanning kv through ys
+                    # would rewrite the FULL stage cache every tick
+                    x, kv_k, kv_v = carry
+                    lp = jax.tree_util.tree_map(
+                        lambda a: jax.lax.dynamic_index_in_dim(
+                            a, l, 0, keepdims=False), layers)
+                    valid = valid_l[l]
+                    kb = jax.lax.dynamic_slice(
+                        kv_k, (l, mb_idx * mb, 0, 0, 0),
+                        (1, mb, seq_loc, hk, hd))[0]
+                    vb = jax.lax.dynamic_slice(
+                        kv_v, (l, mb_idx * mb, 0, 0, 0),
+                        (1, mb, seq_loc, hk, hd))[0]
+                    x, kb, vb = layer_decode(lp, valid, x, kb, vb,
+                                             pos_tok, t_idx)
+                    kv_k = jax.lax.dynamic_update_slice(
+                        kv_k, kb[None], (l, mb_idx * mb, 0, 0, 0))
+                    kv_v = jax.lax.dynamic_update_slice(
+                        kv_v, vb[None], (l, mb_idx * mb, 0, 0, 0))
+                    return x, kv_k, kv_v
+
+                x, kv_k, kv_v = jax.lax.fori_loop(
+                    0, lps, one_layer, (x, kv_k, kv_v))
+                # ---- last stage: unembed, bank logits for this µb --------
+                xn = rms_norm(params["final_norm"], x)
+                lg = (xn @ unemb if unemb is not None
+                      else xn @ emb.T).astype(jnp.float32)
+                is_last = (s_idx == n_stages - 1).astype(jnp.float32)
+                logits_acc = jax.lax.dynamic_update_slice(
+                    logits_acc, (lg * is_last)[None],
+                    (mb_idx, 0, 0, 0))
+                # ---- hop to the next stage -------------------------------
+                perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+                x_wire = jax.lax.ppermute(x, sa, perm)
+                return (x_wire, kv_k, kv_v, logits_acc), ()
+
+            (x_wire, kv_k, kv_v, logits_acc), _ = jax.lax.scan(
+                tick, (x_wire, kv_k, kv_v, logits_acc), jnp.arange(n_micro))
+            logits = jax.lax.psum(logits_acc, sa)   # only last stage nonzero
+            logits = logits.reshape(batch, T, v_loc)
+            return kv_k[None], kv_v[None], x_wire[None], logits
+
+        p_specs = self.param_specs()
+        kv_spec = P(sa, None, None, ta, None, None)
+        wire_spec = P(sa, None, None, None)
+
+        def step(params, state, tokens):
+            kv_k, kv_v, wire, logits = jax.shard_map(
+                stage_fn, mesh=self.mesh,
+                in_specs=(p_specs, kv_spec, kv_spec, wire_spec, P(),
+                          P(None, None)),
+                out_specs=(kv_spec, kv_spec, wire_spec, P(None, None, ta)),
+                check_vma=False,
+            )(params, state["k"], state["v"], state["wire"],
+              state["length"], tokens)
+            return {"k": kv_k, "v": kv_v, "wire": wire,
+                    "length": state["length"] + T}, logits
+
+        return step

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels. Each kernel ships kernel.py (pl.pallas_call +
+BlockSpec VMEM tiling), ops.py (jit'd wrapper, interpret on CPU), and
+ref.py (pure-jnp oracle used by the shape/dtype sweep tests)."""

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the SSD scan kernel (re-exports the model's chunked
+reference so the kernel and the model share one source of truth)."""
+from __future__ import annotations
+
+from ...models.mamba import ssd_chunked as ssd_scan_ref
+
+__all__ = ["ssd_scan_ref"]

@@ -1,0 +1,142 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Perf hillclimbing driver: one (arch x shape x mesh) cell per invocation,
+with config overrides, full command-stream breakdown, and optional Pallas
+kernel credit.  Appends labeled records to results/hillclimb.jsonl so the
+EXPERIMENTS.md SSPerf log can show every hypothesis -> change -> before/after.
+
+  python -m repro.launch.hillclimb --arch llava-next-34b --shape prefill_32k \
+      --label sp_on --set seq_shard=True --set attn_chunk=2048
+"""
+import argparse
+import json
+from typing import Any, Dict
+
+from ..core import adjusted, analyze, attribute
+from .dryrun import run_cell
+
+
+def _parse_val(v: str) -> Any:
+    if v in ("True", "False"):
+        return v == "True"
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--label", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value")
+    ap.add_argument("--kernel-credit", action="append", default=[],
+                    help=("tag:read_write_bytes_per_device — replace the "
+                          "tagged interior's HBM traffic with the kernel's "
+                          "I/O working set (Pallas VMEM-resident tiles)"))
+    ap.add_argument("--kernel-credit-flops", action="append", default=[],
+                    help="tag:flops_scale (e.g. causal skip = 0.5)")
+    ap.add_argument("--kernel-credit-mult", default=None,
+                    help=("min_multiplier:io_bytes — credit ALL entries with "
+                          "execution multiplier >= min (kernel-interior loop "
+                          "bodies) down to the kernel I/O working set"))
+    ap.add_argument("--pp", action="store_true",
+                    help="use the shard_map pipeline-parallel decode path")
+    ap.add_argument("--pp-tokens", type=int, default=1,
+                    help="tokens scored per PP launch (weight-stream amortization)")
+    ap.add_argument("--top", type=int, default=14)
+    ap.add_argument("--out", default="results/hillclimb.jsonl")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = _parse_val(v)
+
+    if args.pp:
+        from .dryrun import run_pp_cell
+        rec = run_pp_cell(args.arch, args.shape, args.mesh == "multi",
+                          overrides=overrides, keep_artifacts=True,
+                          tokens_per_launch=args.pp_tokens)
+    else:
+        rec = run_cell(args.arch, args.shape, args.mesh == "multi",
+                       keep_artifacts=True, overrides=overrides)
+    if rec["status"] != "ok":
+        print(json.dumps({k: v for k, v in rec.items()
+                          if not k.startswith("_")}, indent=2)[:2000])
+        raise SystemExit(1)
+    cs = rec.pop("_captured")
+    rep = analyze(cs, chips=rec["chips"],
+                  model_flops_total=rec["roofline"]["model_flops_total"])
+
+    # ---- optional kernel credit -------------------------------------------
+    credits: Dict[str, Any] = {}
+    d_mem = d_flops = 0.0
+    for spec in args.kernel_credit:
+        tag, io_bytes = spec.split(":")
+        a = attribute(cs, tag)
+        d_mem += float(io_bytes) - a["memory_bytes"]
+        credits[tag] = {"replaced_mem": a["memory_bytes"],
+                        "with_io_bytes": float(io_bytes)}
+    for spec in args.kernel_credit_flops:
+        tag, scale = spec.split(":")
+        a = attribute(cs, tag)
+        d_flops += (float(scale) - 1.0) * a["flops"]
+        credits.setdefault(tag, {})["flops_scale"] = float(scale)
+    if args.kernel_credit_mult:
+        min_mult, io_bytes = args.kernel_credit_mult.split(":")
+        interior = sum((e.result_bytes + e.operand_bytes) * e.multiplier
+                       for e in cs.stream.entries
+                       if e.multiplier >= int(min_mult))
+        d_mem += float(io_bytes) - interior
+        credits["mult>=" + min_mult] = {"replaced_mem": interior,
+                                        "with_io_bytes": float(io_bytes)}
+    if credits:
+        rep = adjusted(rep, d_flops=d_flops, d_mem=d_mem,
+                       name=rep.name + "+kernels")
+        rec["roofline_kernel_credited"] = rep.to_dict()
+        rec["kernel_credits"] = credits
+
+    # ---- breakdowns -------------------------------------------------------
+    ent = cs.stream.entries
+    print(f"\n===== {args.label}: {args.arch} x {args.shape} x {args.mesh} =====")
+    r = rec["roofline_kernel_credited"] if credits else rec["roofline"]
+    print(f"compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms "
+          f"collective={r['collective_s']*1e3:.2f}ms -> {r['bottleneck']}"
+          f"  MFr={r['model_flops_ratio']:.3f} RF={r['roofline_fraction']:.4f}")
+    m = rec["memory"]
+    print(f"mem/device: args={m.get('argument_size_in_bytes',0)/2**30:.2f} "
+          f"temp={m.get('temp_size_in_bytes',0)/2**30:.2f} GiB")
+    print(f"attribution: {json.dumps(rec['attribution'])}")
+    for metric, key in (("FLOPS", lambda e: e.flops * e.multiplier),
+                        ("MEM", lambda e: (e.result_bytes + e.operand_bytes)
+                         * e.multiplier),
+                        ("ICI", lambda e: e.link_bytes * e.multiplier)):
+        top = sorted(ent, key=key, reverse=True)[:args.top]
+        tot = sum(key(e) for e in ent) or 1
+        print(f"--- top {metric} ---")
+        for e in top:
+            if key(e) <= 0:
+                break
+            print(f"  {100*key(e)/tot:5.1f}% {e.opcode:<18s} x{e.multiplier:<5d}"
+                  f" {key(e):.3e}  {e.op_path[-90:]}")
+
+    rec["label"] = args.label
+    rec["overrides"] = overrides
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        f.write(json.dumps({k: v for k, v in rec.items()
+                            if not k.startswith("_")}) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Render EXPERIMENTS.md tables from results/*.jsonl.
+
+  python -m repro.launch.report_md [--dryrun results/dryrun.jsonl]
+                                   [--hillclimb results/hillclimb.jsonl]
+"""
+import argparse
+import json
+from collections import OrderedDict
+
+
+def _load(path):
+    try:
+        with open(path) as f:
+            return [json.loads(l) for l in f if l.strip()]
+    except FileNotFoundError:
+        return []
+
+
+def _ms(x):
+    return f"{x*1e3:.2f}"
+
+
+def roofline_table(recs, mesh="single"):
+    rows = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) |"
+            " bound | MODEL/HLO | roofline frac | fits ≤16 GiB |",
+            "|---|---|---:|---:|---:|---|---:|---:|---|"]
+    # keep the latest record per cell
+    latest = OrderedDict()
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        latest[(r["arch"], r["shape"])] = r
+    for (arch, shape), r in latest.items():
+        if r["status"] == "skip":
+            rows.append(f"| {arch} | {shape} | — | — | — | SKIP | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | — | — | — | ERROR | — | — | — |")
+            continue
+        rr = r["roofline"]
+        m = r.get("memory", {})
+        per_dev = (m.get("argument_size_in_bytes", 0)
+                   + m.get("temp_size_in_bytes", 0)
+                   + m.get("output_size_in_bytes", 0)) / 2**30
+        fits = "yes" if per_dev <= 16 else f"no ({per_dev:.0f} GiB)"
+        rows.append(
+            f"| {arch} | {shape} | {_ms(rr['compute_s'])} "
+            f"| {_ms(rr['memory_s'])} | {_ms(rr['collective_s'])} "
+            f"| {rr['bottleneck']} | {rr['model_flops_ratio']:.3f} "
+            f"| {rr['roofline_fraction']:.4f} | {fits} |")
+    return "\n".join(rows)
+
+
+def collective_table(recs, mesh="multi"):
+    rows = ["| arch | shape | ICI bytes/device | top collectives |",
+            "|---|---|---:|---|"]
+    latest = OrderedDict()
+    for r in recs:
+        if r.get("mesh") != mesh or r["status"] != "ok":
+            continue
+        latest[(r["arch"], r["shape"])] = r
+    for (arch, shape), r in latest.items():
+        cols = r["stream"].get("collectives", {})
+        tops = ", ".join(f"{k}={v/2**20:.0f} MiB" for k, v in
+                         sorted(cols.items(), key=lambda kv: -kv[1])[:3])
+        rows.append(f"| {arch} | {shape} "
+                    f"| {r['roofline']['ici_bytes_per_device']/2**30:.2f} GiB "
+                    f"| {tops} |")
+    return "\n".join(rows)
+
+
+def hillclimb_table(recs):
+    rows = ["| label | arch × shape | compute (ms) | memory (ms) "
+            "| collective (ms) | bound | roofline frac |",
+            "|---|---|---:|---:|---:|---|---:|"]
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        rr = r.get("roofline_kernel_credited") or r["roofline"]
+        rows.append(
+            f"| {r.get('label','?')} | {r['arch']} × {r['shape']} "
+            f"| {_ms(rr['compute_s'])} | {_ms(rr['memory_s'])} "
+            f"| {_ms(rr['collective_s'])} | {rr['bottleneck']} "
+            f"| {rr['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.jsonl")
+    ap.add_argument("--hillclimb", default="results/hillclimb.jsonl")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "roofline", "multi", "hillclimb"])
+    args = ap.parse_args()
+    dr = _load(args.dryrun)
+    hc = _load(args.hillclimb)
+    if args.section in ("all", "roofline"):
+        print("### Single-pod (16×16 = 256 chips) baseline roofline\n")
+        print(roofline_table(dr, "single"))
+    if args.section in ("all", "multi"):
+        print("\n### Multi-pod (2×16×16 = 512 chips) collective check\n")
+        print(collective_table(dr, "multi"))
+    if args.section in ("all", "hillclimb"):
+        print("\n### Hillclimb iterations\n")
+        print(hillclimb_table(hc))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Serving launcher: batched greedy decode with multi-token launches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+        [--tokens-per-launch 4] [--batch 4] [--new-tokens 16]
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from ..configs import ARCHS, SMOKE_ARCHS
+from ..runtime.server import Request, Server
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b", choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--tokens-per-launch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (SMOKE_ARCHS if args.smoke else ARCHS)[args.arch]
+    srv = Server(cfg, batch_size=args.batch, max_seq=args.max_seq,
+                 tokens_per_launch=args.tokens_per_launch, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                    size=args.prompt_len).astype(np.int32),
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.batch)]
+    out = srv.serve(reqs)
+    print(out)
+    for r in reqs[:2]:
+        print(f"req {r.uid}: {r.tokens}")
+
+
+if __name__ == "__main__":
+    main()

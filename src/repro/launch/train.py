@@ -1,0 +1,50 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --steps 50 \
+        [--smoke] [--steps-per-launch 4] [--ckpt-dir /tmp/ckpt] \
+        [--grad-compression int8] [--seq 256 --batch 8]
+
+On this CPU container use ``--smoke`` (reduced config); on a real slice the
+full config + production mesh apply (see launch/dryrun.py for the sharding).
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..configs import ARCHS, SMOKE_ARCHS
+from ..configs.shapes import ShapeConfig
+from ..runtime.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b", choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps-per-launch", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--grad-compression", default=None,
+                    choices=[None, "int8"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (SMOKE_ARCHS if args.smoke else ARCHS)[args.arch]
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+    tr = Trainer(cfg, shape, steps_per_launch=args.steps_per_launch,
+                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                 grad_compression=args.grad_compression,
+                 peak_lr=args.lr, seed=args.seed)
+    if args.ckpt_dir and tr.maybe_restore():
+        print(f"restored at step {tr.step}")
+    out = tr.train(args.steps)
+    print(out)
+    print(tr.submission_report())
+
+
+if __name__ == "__main__":
+    main()

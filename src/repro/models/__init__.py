@@ -1,0 +1,28 @@
+"""Model zoo: pure-JAX pytree models with scan-over-layers."""
+from __future__ import annotations
+
+from typing import Any
+
+from ..configs.base import ModelConfig
+from .encdec import EncDecLM
+from .hybrid import HybridLM
+from .ssm import MambaLM
+from .transformer import TransformerLM
+from .vlm import VlmLM
+
+__all__ = ["get_model", "TransformerLM", "MambaLM", "HybridLM", "EncDecLM",
+           "VlmLM"]
+
+
+def get_model(cfg: ModelConfig, impl: str = "ref") -> Any:
+    if cfg.family in ("dense", "moe"):
+        return TransformerLM(cfg, impl)
+    if cfg.family == "ssm":
+        return MambaLM(cfg, impl)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg, impl)
+    if cfg.family == "audio":
+        return EncDecLM(cfg, impl)
+    if cfg.family == "vlm":
+        return VlmLM(cfg, impl)
+    raise ValueError(f"unknown family {cfg.family!r}")

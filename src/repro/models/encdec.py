@@ -1,0 +1,185 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings [B, S_enc, d_model] (what the two conv layers
+would emit).  Encoder: non-causal self-attention, sinusoidal positions.
+Decoder: causal self-attention + cross-attention, learned positions.
+
+Decode serves one token against a self-attention KV cache of the assigned
+seq_len and a fixed-length cross-attention KV (CROSS_LEN=1500 — Whisper's
+30 s encoder output; documented adaptation in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import (attention, decode_attention, init_attention,
+                        init_kv_cache)
+from .layers import (Params, cross_entropy_loss, dtype_of, embed,
+                     init_embedding, init_mlp, init_rms_norm, mlp, rms_norm,
+                     sinusoidal_positions, unembed)
+
+__all__ = ["EncDecLM", "CROSS_LEN"]
+
+CROSS_LEN = 1500  # whisper encoder output length (30 s of audio)
+
+
+def _init_enc_block(key: jax.Array, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rms_norm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "ln2": init_rms_norm(cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_block(key: jax.Array, cfg: ModelConfig, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_rms_norm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "ln_x": init_rms_norm(cfg.d_model, dtype),
+        "xattn": init_attention(k2, cfg, dtype),
+        "ln2": init_rms_norm(cfg.d_model, dtype),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, impl: str = "ref") -> None:
+        assert cfg.is_encoder_decoder
+        self.cfg = cfg
+        self.impl = impl
+        self.constraint = lambda x: x
+
+    def init_params(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        dtype = dtype_of(cfg)
+        k_emb, k_enc, k_dec, k_pos = jax.random.split(key, 4)
+        enc_keys = jax.random.split(k_enc, cfg.n_enc_layers)
+        dec_keys = jax.random.split(k_dec, cfg.n_layers)
+        return {
+            "emb": init_embedding(k_emb, cfg.vocab_padded, cfg.d_model,
+                                  dtype, cfg.tie_embeddings),
+            "pos_dec": (jax.random.normal(
+                k_pos, (cfg.max_position, cfg.d_model), jnp.float32)
+                * 0.01).astype(dtype),
+            "encoder": jax.vmap(lambda k: _init_enc_block(k, cfg, dtype))(enc_keys),
+            "decoder": jax.vmap(lambda k: _init_dec_block(k, cfg, dtype))(dec_keys),
+            "enc_norm": init_rms_norm(cfg.d_model, dtype),
+            "final_norm": init_rms_norm(cfg.d_model, dtype),
+        }
+
+    # ---- encoder -----------------------------------------------------------
+    def encode(self, params: Params, frames: jax.Array, mode: str = "train"
+               ) -> jax.Array:
+        """frames: [B, S_enc, D] stub frontend embeddings."""
+        cfg = self.cfg
+        S = frames.shape[1]
+        pos = sinusoidal_positions(S, cfg.d_model).astype(frames.dtype)
+        x = frames + pos[None]
+
+        def scan_fn(carry, lp):
+            h = attention(lp["attn"], cfg, rms_norm(lp["ln1"], carry),
+                          causal=False, impl=self.impl)
+            y = carry + h
+            y = y + mlp(lp["mlp"], rms_norm(lp["ln2"], y), cfg.act)
+            return self.constraint(y), ()
+
+        if cfg.remat and mode == "train":
+            scan_fn = jax.checkpoint(scan_fn)
+        x, _ = jax.lax.scan(scan_fn, x, params["encoder"])
+        return rms_norm(params["enc_norm"], x)
+
+    # ---- decoder ----------------------------------------------------------
+    def decode_train(self, params: Params, tokens: jax.Array,
+                     enc_out: jax.Array, mode: str = "train") -> jax.Array:
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = embed(params["emb"], tokens) + params["pos_dec"][None, :S]
+
+        def scan_fn(carry, lp):
+            y = carry + attention(lp["attn"], cfg,
+                                  rms_norm(lp["ln1"], carry), impl=self.impl)
+            # cross-attention: K/V from encoder output
+            kx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wk"])
+            vx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wv"])
+            y = y + attention(lp["xattn"], cfg, rms_norm(lp["ln_x"], y),
+                              causal=False, impl=self.impl,
+                              kv_override=(kx, vx))
+            y = y + mlp(lp["mlp"], rms_norm(lp["ln2"], y), cfg.act)
+            return self.constraint(y), ()
+
+        if cfg.remat and mode == "train":
+            scan_fn = jax.checkpoint(scan_fn)
+        x, _ = jax.lax.scan(scan_fn, self.constraint(x), params["decoder"])
+        return rms_norm(params["final_norm"], x)
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        x = self.decode_train(params, batch["tokens"], enc_out)
+        ce = cross_entropy_loss(params["emb"], x, batch["labels"],
+                                cfg.loss_chunk, vocab_valid=cfg.vocab_size)
+        return ce, {"ce": ce}
+
+    # ---- serving ------------------------------------------------------------
+    def init_decode_state(self, batch: int, max_seq: int) -> Params:
+        cfg = self.cfg
+        dtype = dtype_of(cfg)
+        self_kv = init_kv_cache(cfg, batch, max_seq, dtype)
+        cross_kv = init_kv_cache(cfg, batch, CROSS_LEN, dtype)
+        return {"k": self_kv["k"], "v": self_kv["v"],
+                "xk": cross_kv["k"], "xv": cross_kv["v"],
+                "length": self_kv["length"]}
+
+    def prefill(self, params: Params, frames: jax.Array, tokens: jax.Array,
+                max_seq: int) -> Tuple[Params, jax.Array]:
+        cfg = self.cfg
+        B = tokens.shape[0]
+        enc_out = self.encode(params, frames, mode="prefill")
+        x = self.decode_train(params, tokens, enc_out, mode="prefill")
+        logits = unembed(params["emb"], x[:, -1:, :])
+        state = self.init_decode_state(B, max_seq)
+        state["length"] = jnp.asarray(tokens.shape[1], jnp.int32)
+        return state, logits
+
+    def decode_step(self, params: Params, state: Params, tokens: jax.Array
+                    ) -> Tuple[Params, jax.Array]:
+        cfg = self.cfg
+        length = state["length"]
+        x = embed(params["emb"], tokens) + params["pos_dec"][length][None, None]
+
+        def scan_fn(carry, inp):
+            lp, kc, vc, xk, xv = inp
+            y, kc, vc = decode_attention(
+                lp["attn"], cfg, rms_norm(lp["ln1"], carry), kc, vc, length)
+            y = carry + y
+            # cross attention against precomputed (static) cross KV
+            h = rms_norm(lp["ln_x"], y)
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["xattn"]["wq"])
+            n_rep = cfg.n_heads_padded // cfg.n_kv_heads
+            B = q.shape[0]
+            q_ = q.reshape(B, cfg.n_kv_heads, n_rep, cfg.hd)
+            s = jnp.einsum("bgrd,bsgd->bgrs", q_, xk).astype(jnp.float32)
+            s = s * (cfg.hd ** -0.5)
+            pr = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bgrs,bsgd->bgrd", pr.astype(xv.dtype), xv)
+            o = o.reshape(B, 1, cfg.n_heads_padded, cfg.hd)
+            y = y + jnp.einsum("bshk,hkd->bsd", o, lp["xattn"]["wo"])
+            y = y + mlp(lp["mlp"], rms_norm(lp["ln2"], y), cfg.act)
+            return y, (kc, vc)
+
+        x, (nk, nv) = jax.lax.scan(
+            scan_fn, x, (params["decoder"], state["k"], state["v"],
+                         state["xk"], state["xv"]))
+        x = rms_norm(params["final_norm"], x)
+        logits = unembed(params["emb"], x)
+        return {"k": nk, "v": nv, "xk": state["xk"], "xv": state["xv"],
+                "length": length + 1}, logits

@@ -1,0 +1,198 @@
+"""Jamba-style hybrid LM: Mamba/attention 1:7 interleave + MoE cadence.
+
+Layers are grouped into periods of ``cfg.attn_every`` (8 for jamba); within a
+period the sub-layer types are fixed (attention at ``attn_offset``, SSM
+elsewhere; MoE replaces the MLP on every ``moe_every``-th layer).  The model
+scans over periods: parameters are stacked [n_groups, ...] per sub-layer,
+giving O(1) command footprint in depth like every other model here.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import (attention, decode_attention, init_attention,
+                        init_kv_cache)
+from .layers import (Params, cross_entropy_loss, dtype_of, embed,
+                     init_embedding, init_mlp, init_rms_norm, mlp, rms_norm,
+                     unembed)
+from .mamba import (init_mamba, init_ssm_state, mamba_block,
+                    mamba_decode_step)
+from .moe import init_moe, moe_block
+from .transformer import MOE_AUX_COEF
+
+__all__ = ["HybridLM"]
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig, impl: str = "ref") -> None:
+        self.constraint = lambda x: x
+        assert cfg.attn_every > 0, "hybrid requires attn_every"
+        assert cfg.n_layers % cfg.attn_every == 0
+        self.cfg = cfg
+        self.impl = impl
+        self.period = cfg.attn_every
+        self.n_groups = cfg.n_layers // self.period
+        # fixed sub-layer plan within one period
+        self.plan: List[Tuple[str, str]] = []
+        for i in range(self.period):
+            mixer = "attn" if cfg.is_attn_layer(i) else "mamba"
+            ffn = "moe" if cfg.is_moe_layer(i) else "mlp"
+            self.plan.append((mixer, ffn))
+        self.n_attn_per_group = sum(1 for m, _ in self.plan if m == "attn")
+        self.n_ssm_per_group = self.period - self.n_attn_per_group
+
+    # ---- params ------------------------------------------------------------
+    def _init_group(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        dtype = dtype_of(cfg)
+        keys = jax.random.split(key, self.period)
+        group: Dict[str, Params] = {}
+        for i, (mixer, ffn) in enumerate(self.plan):
+            k1, k2 = jax.random.split(keys[i])
+            sub: Params = {"ln1": init_rms_norm(cfg.d_model, dtype),
+                           "ln2": init_rms_norm(cfg.d_model, dtype)}
+            if mixer == "attn":
+                sub["attn"] = init_attention(k1, cfg, dtype)
+            else:
+                sub["mamba"] = init_mamba(k1, cfg, dtype)
+            if ffn == "moe":
+                sub["moe"] = init_moe(k2, cfg, dtype)
+            else:
+                sub["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+            group[f"sub{i}"] = sub
+        return group
+
+    def init_params(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        dtype = dtype_of(cfg)
+        k_emb, k_layers = jax.random.split(key)
+        gkeys = jax.random.split(k_layers, self.n_groups)
+        groups = jax.vmap(self._init_group)(gkeys)
+        return {
+            "emb": init_embedding(k_emb, cfg.vocab_padded, cfg.d_model,
+                                  dtype, cfg.tie_embeddings),
+            "groups": groups,
+            "final_norm": init_rms_norm(cfg.d_model, dtype),
+        }
+
+    # ---- forward -------------------------------------------------------------
+    def _group_forward(self, gp: Params, x: jax.Array, mode: str
+                       ) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        for i, (mixer, ffn) in enumerate(self.plan):
+            sub = gp[f"sub{i}"]
+            h = rms_norm(sub["ln1"], x)
+            if mixer == "attn":
+                x = x + attention(sub["attn"], cfg, h, impl=self.impl)
+            else:
+                x = x + mamba_block(sub["mamba"], cfg, h, self.impl)
+            h = rms_norm(sub["ln2"], x)
+            if ffn == "moe":
+                m, aux = moe_block(sub["moe"], cfg, h)
+                aux_total = aux_total + aux
+            else:
+                m = mlp(sub["mlp"], h, cfg.act)
+            x = x + m
+        return x, aux_total / self.period
+
+    def hidden_states(self, params: Params, tokens: jax.Array,
+                      mode: str = "train") -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x = embed(params["emb"], tokens, cfg.embed_scale)
+
+        def scan_fn(carry, gp):
+            y, aux = self._group_forward(gp, carry, mode)
+            return self.constraint(y), aux
+
+        if cfg.remat and mode == "train":
+            scan_fn = jax.checkpoint(scan_fn)
+        x, auxs = jax.lax.scan(scan_fn, self.constraint(x), params["groups"])
+        return rms_norm(params["final_norm"], x), jnp.mean(auxs)
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        x, aux = self.hidden_states(params, batch["tokens"], mode="train")
+        ce = cross_entropy_loss(params["emb"], x, batch["labels"],
+                                cfg.loss_chunk, vocab_valid=cfg.vocab_size)
+        return ce + MOE_AUX_COEF * aux, {"ce": ce, "aux": aux}
+
+    # ---- serving ----------------------------------------------------------------
+    def init_decode_state(self, batch: int, max_seq: int) -> Params:
+        cfg = self.cfg
+        dtype = dtype_of(cfg)
+        kv = init_kv_cache(cfg, batch, max_seq, dtype,
+                           n_layers=self.n_groups * self.n_attn_per_group)
+        # reshape leading dim to [n_groups, n_attn_per_group]
+        kv["k"] = kv["k"].reshape((self.n_groups, self.n_attn_per_group)
+                                  + kv["k"].shape[1:])
+        kv["v"] = kv["v"].reshape((self.n_groups, self.n_attn_per_group)
+                                  + kv["v"].shape[1:])
+        ssm = init_ssm_state(cfg, batch, dtype,
+                             n_layers=self.n_groups * self.n_ssm_per_group)
+        ssm = {k: v.reshape((self.n_groups, self.n_ssm_per_group) + v.shape[1:])
+               for k, v in ssm.items()}
+        return {"k": kv["k"], "v": kv["v"], "length": kv["length"],
+                "ssm": ssm}
+
+    def prefill(self, params: Params, tokens: jax.Array, max_seq: int
+                ) -> Tuple[Params, jax.Array]:
+        # dry-run prefill lowers the full forward; cache assembly reuses
+        # the decode state shape (zero-filled here, filled by the server).
+        B, S = tokens.shape
+        x, _ = self.hidden_states(params, tokens, mode="prefill")
+        logits = unembed(params["emb"], x[:, -1:, :])
+        state = self.init_decode_state(B, max_seq)
+        state["length"] = jnp.asarray(S, jnp.int32)
+        return state, logits
+
+    def decode_step(self, params: Params, state: Params, tokens: jax.Array
+                    ) -> Tuple[Params, jax.Array]:
+        cfg = self.cfg
+        x = embed(params["emb"], tokens, cfg.embed_scale)
+        length = state["length"]
+
+        def scan_fn(carry, inp):
+            gp, kc, vc, ssm = inp
+            x = carry
+            ai = 0
+            si = 0
+            new_k, new_v, new_ssm = [], [], []
+            for i, (mixer, ffn) in enumerate(self.plan):
+                sub = gp[f"sub{i}"]
+                h_in = rms_norm(sub["ln1"], x)
+                if mixer == "attn":
+                    a, k1, v1 = decode_attention(
+                        sub["attn"], cfg, h_in, kc[ai], vc[ai], length)
+                    new_k.append(k1)
+                    new_v.append(v1)
+                    x = x + a
+                    ai += 1
+                else:
+                    st = jax.tree_util.tree_map(lambda a: a[si], ssm)
+                    dx, st = mamba_decode_step(sub["mamba"], cfg, h_in, st)
+                    new_ssm.append(st)
+                    x = x + dx
+                    si += 1
+                h2 = rms_norm(sub["ln2"], x)
+                if ffn == "moe":
+                    m, _ = moe_block(sub["moe"], cfg, h2)
+                else:
+                    m = mlp(sub["mlp"], h2, cfg.act)
+                x = x + m
+            stacked_ssm = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_ssm)
+            return x, (jnp.stack(new_k), jnp.stack(new_v), stacked_ssm)
+
+        x, (nk, nv, nssm) = jax.lax.scan(
+            scan_fn, x,
+            (params["groups"], state["k"], state["v"], state["ssm"]))
+        x = rms_norm(params["final_norm"], x)
+        logits = unembed(params["emb"], x)
+        return {"k": nk, "v": nv, "ssm": nssm,
+                "length": length + 1}, logits

@@ -1,0 +1,168 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, embeddings.
+
+Pure-JAX (no flax): parameters are pytrees of arrays, every init function is
+``jax.eval_shape``-safe so the dry-run never allocates real weights.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+__all__ = [
+    "Params", "rms_norm", "init_rms_norm", "rotary", "apply_rope",
+    "init_mlp", "mlp", "init_embedding", "embed", "unembed",
+    "cross_entropy_loss", "sinusoidal_positions", "dtype_of",
+]
+
+Params = Dict[str, Any]
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def init_rms_norm(d: int, dtype) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # (1 + scale): zero-init scale gives identity — standard for stability
+    return (x * (1.0 + p["scale"].astype(jnp.float32))).astype(orig)
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding (NeoX half-split convention)
+# --------------------------------------------------------------------------
+def rotary(positions: jax.Array, head_dim: int,
+           theta: float = 10000.0) -> Tuple[jax.Array, jax.Array]:
+    """(sin, cos) of shape [..., head_dim/2] for integer positions."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: [..., S, H, hd]; sin/cos: [..., S, hd/2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin_b = sin[..., None, :]
+    cos_b = cos[..., None, :]
+    out = jnp.concatenate(
+        [x1 * cos_b - x2 * sin_b, x2 * cos_b + x1 * sin_b], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style sinusoidal table [n, d] (fp32)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(n, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# --------------------------------------------------------------------------
+def init_mlp(key: jax.Array, d: int, ff: int, dtype) -> Params:
+    kg, ku, kd = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_ff = ff ** -0.5
+    return {
+        "w_gate": (jax.random.normal(kg, (d, ff), jnp.float32) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ku, (d, ff), jnp.float32) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(kd, (ff, d), jnp.float32) * s_ff).astype(dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    if act == "gelu":
+        g = jax.nn.gelu(g)
+    else:
+        g = jax.nn.silu(g)
+    return (g * u) @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding (vocab-sharded friendly)
+# --------------------------------------------------------------------------
+def init_embedding(key: jax.Array, vocab: int, d: int, dtype,
+                   tie: bool = False) -> Params:
+    ke, ko = jax.random.split(key)
+    p = {"embed": (jax.random.normal(ke, (vocab, d), jnp.float32)
+                   * (d ** -0.5)).astype(dtype)}
+    if not tie:
+        p["unembed"] = (jax.random.normal(ko, (d, vocab), jnp.float32)
+                        * (d ** -0.5)).astype(dtype)
+    return p
+
+
+def embed(p: Params, tokens: jax.Array, scale: bool = False) -> jax.Array:
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(x.shape[-1] ** 0.5, x.dtype)
+    return x
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    if "unembed" in p:
+        return x @ p["unembed"]
+    return x @ p["embed"].T
+
+
+# --------------------------------------------------------------------------
+# chunked cross-entropy loss (never materializes [B, S, V] at once)
+# --------------------------------------------------------------------------
+def cross_entropy_loss(emb_params: Params, x: jax.Array, labels: jax.Array,
+                       chunk: int = 512, vocab_valid: Optional[int] = None
+                       ) -> jax.Array:
+    """Mean CE over [B, S] labels given final hidden states x: [B, S, D].
+
+    Chunked over the sequence so the per-chunk logits [B, c, V] are the
+    largest live buffer; padded vocab rows (>= vocab_valid) are masked.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    rem = S - n_chunks * chunk
+
+    def chunk_loss(xc, yc):
+        logits = unembed(emb_params, xc).astype(jnp.float32)
+        if vocab_valid is not None and vocab_valid < logits.shape[-1]:
+            neg = jnp.finfo(jnp.float32).min
+            mask = jnp.arange(logits.shape[-1]) >= vocab_valid
+            logits = jnp.where(mask, neg, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    if n_chunks > 0:
+        xs = x[:, :n_chunks * chunk].reshape(B, n_chunks, chunk, D)
+        ys = labels[:, :n_chunks * chunk].reshape(B, n_chunks, chunk)
+
+        def body(acc, args):
+            xc, yc = args
+            return acc + chunk_loss(xc, yc), ()
+
+        total, _ = jax.lax.scan(
+            body, jnp.zeros((), jnp.float32),
+            (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(ys, 1, 0)))
+    else:
+        total = jnp.zeros((), jnp.float32)
+    if rem:
+        total = total + chunk_loss(x[:, n_chunks * chunk:],
+                                   labels[:, n_chunks * chunk:])
+    return total / (B * S)

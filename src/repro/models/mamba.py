@@ -1,0 +1,205 @@
+"""Mamba2 (SSD — state-space duality) block: chunked scan formulation.
+
+The chunked algorithm (Dao & Gu, 2024) splits the sequence into chunks of Q:
+within a chunk the output is an attention-like quadratic term masked by the
+cumulative decay; across chunks a small recurrent state [H, hd, N] is carried.
+This maps naturally onto the TPU: the intra-chunk term is MXU-friendly
+matmuls, the inter-chunk scan is O(S/Q) sequential steps.  The pure-jnp
+implementation here is the oracle for ``repro.kernels.ssd_scan``.
+
+Projections are kept *separate* (z/x/B/C/dt) rather than fused, so each is
+cleanly tensor-parallel: the x-path (heads) shards over the model axis while
+the small shared B/C paths replicate — fused layouts would slice across
+shard boundaries and force resharding collectives.
+
+Decode carries state [B, H, hd, N] and conv ring buffers — O(1) per token
+(this is why the ssm/hybrid archs run the ``long_500k`` shape).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import Params, init_rms_norm, rms_norm
+
+__all__ = ["init_mamba", "mamba_block", "mamba_decode_step", "init_ssm_state",
+           "ssd_chunked"]
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    di = cfg.d_inner
+    ns = cfg.ssm_state
+    nh = cfg.ssm_heads
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "z_proj": (jax.random.normal(ks[0], (d, di), jnp.float32) * s).astype(dtype),
+        "x_proj": (jax.random.normal(ks[1], (d, di), jnp.float32) * s).astype(dtype),
+        "B_proj": (jax.random.normal(ks[2], (d, ns), jnp.float32) * s).astype(dtype),
+        "C_proj": (jax.random.normal(ks[3], (d, ns), jnp.float32) * s).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[4], (d, nh), jnp.float32) * s).astype(dtype),
+        "conv_x_w": (jax.random.normal(ks[5], (K, di), jnp.float32) * 0.1).astype(dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_B_w": (jax.random.normal(ks[6], (K, ns), jnp.float32) * 0.1).astype(dtype),
+        "conv_B_b": jnp.zeros((ns,), dtype),
+        "conv_C_w": (jax.random.normal(ks[7], (K, ns), jnp.float32) * 0.1).astype(dtype),
+        "conv_C_b": jnp.zeros((ns,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),            # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": init_rms_norm(di, dtype),
+        "out_proj": (jax.random.normal(ks[0], (di, d), jnp.float32)
+                     * (di ** -0.5)).astype(dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. x: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[K - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, A: jax.Array, Bc: jax.Array,
+                Cc: jax.Array, chunk: int,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xh: [B, S, H, P] head inputs; dt: [B, S, H] (post-softplus);
+    A: [H] (negative); Bc/Cc: [B, S, N] (single group).
+    Returns (y [B,S,H,P], final state [B,H,P,N]).
+    """
+    B, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    n = S // chunk
+    assert n * chunk == S, "sequence must be divisible by ssm chunk"
+
+    xc = jnp.moveaxis(xh.reshape(B, n, chunk, H, P), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(B, n, chunk, H), 1, 0)
+    Bcc = jnp.moveaxis(Bc.reshape(B, n, chunk, N), 1, 0)
+    Ccc = jnp.moveaxis(Cc.reshape(B, n, chunk, N), 1, 0)
+
+    dA = dtc * A[None, None, None, :]                      # [n,B,Q,H] (<=0)
+    cum = jnp.cumsum(dA, axis=2)                           # within-chunk cumsum
+    seg_total = cum[:, :, -1, :]                           # [n,B,H]
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def body(h, args):
+        x_i, dt_i, B_i, C_i, cum_i, tot_i = args
+        # ---- intra-chunk (quadratic, attention-like) ----
+        # L[q,k] = exp(cum[q]-cum[k]) for q>=k
+        diff = cum_i[:, :, None, :] - cum_i[:, None, :, :]          # [B,Q,Q,H]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        L = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        CB = jnp.einsum("bqn,bkn->bqk", C_i, B_i).astype(jnp.float32)
+        G = CB[..., None] * L                                       # [B,Q,Q,H]
+        y_intra = jnp.einsum("bqkh,bkh,bkhp->bqhp", G, dt_i, x_i)
+        # ---- inter-chunk (read carried state) ----
+        decay_q = jnp.exp(cum_i)                                    # [B,Q,H]
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp",
+                             C_i.astype(jnp.float32), h, decay_q)
+        # ---- state update ----
+        decay_suf = jnp.exp(tot_i[:, None, :] - cum_i)              # [B,Q,H]
+        dB = jnp.einsum("bqh,bqn->bqhn", dt_i * decay_suf, B_i)
+        h_new = h * jnp.exp(tot_i)[:, :, None, None] + jnp.einsum(
+            "bqhn,bqhp->bhpn", dB, x_i.astype(jnp.float32))
+        return h_new, (y_intra + y_inter)
+
+    h_final, yc = jax.lax.scan(
+        body, h0, (xc.astype(jnp.float32), dtc, Bcc.astype(jnp.float32),
+                   Ccc.astype(jnp.float32), cum, seg_total))
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, S, H, P)
+    return y.astype(xh.dtype), h_final
+
+
+def mamba_block(p: Params, cfg: ModelConfig, x: jax.Array,
+                impl: str = "ref") -> jax.Array:
+    """Full-sequence Mamba2 block. x: [B, S, D] -> [B, S, D]."""
+    B, S, D = x.shape
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z = x @ p["z_proj"]
+    xs = _causal_conv(x @ p["x_proj"], p["conv_x_w"], p["conv_x_b"])
+    Bc = _causal_conv(x @ p["B_proj"], p["conv_B_w"], p["conv_B_b"])
+    Cc = _causal_conv(x @ p["C_proj"], p["conv_C_w"], p["conv_C_b"])
+    dt = jax.nn.softplus((x @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, nh, hd)
+    chunk = min(cfg.ssm_chunk, S)
+    if impl == "pallas":
+        from ..kernels.ssd_scan.ops import ssd_scan
+        y, _ = ssd_scan(xh, dt, A, Bc, Cc, chunk=chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt, A, Bc, Cc, chunk=chunk)
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"]
+
+
+# --------------------------------------------------------------------------
+# decode path
+# --------------------------------------------------------------------------
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype,
+                   n_layers: Optional[int] = None) -> Dict[str, jax.Array]:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    nh, hd, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    K = cfg.ssm_conv
+    return {
+        "h": jnp.zeros((L, batch, nh, hd, ns), jnp.float32),
+        "conv_x": jnp.zeros((L, batch, K - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((L, batch, K - 1, ns), dtype),
+        "conv_C": jnp.zeros((L, batch, K - 1, ns), dtype),
+    }
+
+
+def _conv_step(window_prev: jax.Array, new: jax.Array, w: jax.Array,
+               b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One causal-conv step. window_prev: [B,K-1,C]; new: [B,C]."""
+    window = jnp.concatenate([window_prev, new[:, None, :]], axis=1)  # [B,K,C]
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    return jax.nn.silu(out), window[:, 1:]
+
+
+def mamba_decode_step(p: Params, cfg: ModelConfig, x: jax.Array,
+                      state: Dict[str, jax.Array]
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token Mamba2 step.
+
+    x: [B, 1, D]; state: {h [B,H,P,N], conv_x [B,K-1,di], conv_B, conv_C}.
+    Returns (y [B,1,D], new_state).
+    """
+    B = x.shape[0]
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xt = x[:, 0]                                            # [B, D]
+    z = xt @ p["z_proj"]
+    xs, conv_x = _conv_step(state["conv_x"], xt @ p["x_proj"],
+                            p["conv_x_w"], p["conv_x_b"])
+    Bc, conv_B = _conv_step(state["conv_B"], xt @ p["B_proj"],
+                            p["conv_B_w"], p["conv_B_b"])
+    Cc, conv_C = _conv_step(state["conv_C"], xt @ p["C_proj"],
+                            p["conv_C_w"], p["conv_C_b"])
+    dt = jax.nn.softplus((xt @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"])                    # [B,H]
+    A = -jnp.exp(p["A_log"])                                # [H]
+    xh = xs.reshape(B, nh, hd).astype(jnp.float32)
+    dA = jnp.exp(dt * A[None, :])                           # [B,H]
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bc.astype(jnp.float32), xh)
+    h_new = state["h"] * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cc.astype(jnp.float32), h_new)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z))
+    new_state = {"h": h_new, "conv_x": conv_x, "conv_B": conv_B,
+                 "conv_C": conv_C}
+    return (y @ p["out_proj"])[:, None, :], new_state

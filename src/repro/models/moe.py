@@ -1,0 +1,214 @@
+"""Mixture-of-Experts: top-k router + shared experts.
+
+Two dispatch implementations:
+
+* ``dense`` — every expert runs on every token, combined with router weights.
+  Simple oracle; FLOPs are E/k× the useful work (the roofline
+  ``model_flops_ratio`` exposes exactly this waste).
+* ``sorted`` — capacity-bounded sort-based dispatch (MaxText-style): tokens
+  are argsorted by assigned expert, each expert processes a static capacity
+  C = ceil(S·k·cf / E) slice, outputs are scattered back with router weights.
+  Per-batch-row dispatch keeps sorts local to the data shard (no collectives
+  from the sort itself).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import Params
+
+__all__ = ["init_moe", "moe_block", "moe_dense", "moe_sorted"]
+
+
+def _act(g: jax.Array, act: str) -> jax.Array:
+    return jax.nn.gelu(g) if act == "gelu" else jax.nn.silu(g)
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, dtype) -> Params:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    s_in, s_ff = d ** -0.5, ff ** -0.5
+    p = {
+        "router": (jax.random.normal(kr, (d, E), jnp.float32) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(kg, (E, d, ff), jnp.float32) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ku, (E, d, ff), jnp.float32) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(kd, (E, ff, d), jnp.float32) * s_ff).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        Es = cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks, 3)
+        p["shared"] = {
+            "w_gate": (jax.random.normal(k1, (Es, d, ff), jnp.float32) * s_in).astype(dtype),
+            "w_up": (jax.random.normal(k2, (Es, d, ff), jnp.float32) * s_in).astype(dtype),
+            "w_down": (jax.random.normal(k3, (Es, ff, d), jnp.float32) * s_ff).astype(dtype),
+        }
+    return p
+
+
+def _shared_ffn(p: Params, x: jax.Array, act: str) -> jax.Array:
+    # all shared experts always active: sum of their outputs
+    g = jnp.einsum("bsd,edf->ebsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,edf->ebsf", x, p["w_up"])
+    y = jnp.einsum("ebsf,efd->bsd", _act(g, act) * u, p["w_down"])
+    return y
+
+
+def _router(p: Params, cfg: ModelConfig, x: jax.Array
+            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (weights [B,S,k] fp32 normalized, ids [B,S,k], aux_loss)."""
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch-style): E * sum_e f_e * p_e
+    E = cfg.n_experts
+    me = jnp.mean(probs, axis=(0, 1))
+    one_hot = jax.nn.one_hot(ids[..., 0], E, dtype=jnp.float32)
+    fe = jnp.mean(one_hot, axis=(0, 1))
+    aux = E * jnp.sum(me * fe)
+    return w, ids, aux
+
+
+def moe_dense(p: Params, cfg: ModelConfig, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Reference: all experts on all tokens."""
+    w, ids, aux = _router(p, cfg, x)
+    g = jnp.einsum("bsd,edf->ebsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,edf->ebsf", x, p["w_up"])
+    y_e = jnp.einsum("ebsf,efd->ebsd", _act(g, cfg.act) * u, p["w_down"])
+    mask = jax.nn.one_hot(ids, cfg.n_experts, dtype=jnp.float32)  # [B,S,k,E]
+    comb = jnp.einsum("bske,bsk->ebs", mask, w).astype(x.dtype)
+    y = jnp.einsum("ebs,ebsd->bsd", comb, y_e)
+    if cfg.n_shared_experts:
+        y = y + _shared_ffn(p["shared"], x, cfg.act)
+    return y, aux
+
+
+def _sorted_core(cfg: ModelConfig, x: jax.Array, w: jax.Array,
+                 ids: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                 w_down: jax.Array) -> jax.Array:
+    """Sort-based capacity dispatch given router outputs (no collectives).
+
+    With ``w_gate/w_up`` holding a 1/TP slice of d_ff and ``w_down`` the
+    matching slice of its contraction dim, the output is a PARTIAL sum —
+    callers running under shard_map psum it over the model axis *after*
+    the combine, so the reduction is over [B,S,D] rather than the k·cf×
+    expanded [B,E,C,D] (the key collective saving; see EXPERIMENTS.md §Perf).
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, int(S * k * cfg.capacity_factor / E))
+    C = min(C, S)
+
+    def dispatch_row(xr, wr, idr):
+        # xr: [S, D]; wr/idr: [S, k]
+        flat_ids = idr.reshape(-1)                        # [S*k]
+        flat_w = wr.reshape(-1)
+        tok_idx = jnp.repeat(jnp.arange(S), k)            # source token
+        order = jnp.argsort(flat_ids, stable=True)        # group by expert
+        sorted_ids = flat_ids[order]
+        sorted_tok = tok_idx[order]
+        sorted_w = flat_w[order]
+        # position of each slot within its expert group
+        counts = jnp.bincount(sorted_ids, length=E)       # [E]
+        starts = jnp.cumsum(counts) - counts              # [E]
+        within = jnp.arange(S * k) - starts[sorted_ids]   # rank in group
+        keep = within < C                                 # capacity clip
+        # gather tokens into [E, C, D]
+        # dropped slots get an out-of-bounds index → discarded by mode="drop"
+        slot = jnp.where(keep, sorted_ids * C + within, E * C)
+        src = jnp.full((E * C,), S, jnp.int32)            # S = zero-pad row
+        src = src.at[slot].set(sorted_tok.astype(jnp.int32), mode="drop")
+        wtab = jnp.zeros((E * C,), jnp.float32)
+        wtab = wtab.at[slot].add(sorted_w, mode="drop")
+        xr_pad = jnp.concatenate([xr, jnp.zeros((1, D), xr.dtype)], axis=0)
+        xe = xr_pad[src].reshape(E, C, D)
+        return xe, src, wtab
+
+    xe, src, wtab = jax.vmap(dispatch_row)(x, w, ids)      # [B,E,C,D] ...
+    g = jnp.einsum("becd,edf->becf", xe, w_gate)
+    u = jnp.einsum("becd,edf->becf", xe, w_up)
+    ye = jnp.einsum("becf,efd->becd", _act(g, cfg.act) * u, w_down)
+
+    def combine_row(ye_r, src_r, wtab_r):
+        ye_flat = ye_r.reshape(E * C, D) * wtab_r[:, None].astype(ye_r.dtype)
+        out = jnp.zeros((S + 1, D), ye_r.dtype)
+        out = out.at[src_r].add(ye_flat, mode="drop")
+        return out[:S]
+
+    return jax.vmap(combine_row)(ye, src, wtab)
+
+
+def moe_sorted(p: Params, cfg: ModelConfig, x: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Sort-based capacity dispatch (XLA places the collectives)."""
+    w, ids, aux = _router(p, cfg, x)
+    y = _sorted_core(cfg, x, w, ids, p["w_gate"], p["w_up"], p["w_down"])
+    if cfg.n_shared_experts:
+        y = y + _shared_ffn(p["shared"], x, cfg.act)
+    return y, aux
+
+
+def moe_sorted_smap(p: Params, cfg: ModelConfig, x: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """shard_map MoE: expert-internal TP with psum AFTER the combine.
+
+    XLA's default partitioning all-reduces the k·cf×-expanded expert outputs
+    [B,E,C,D] (and all-gathers the dispatch); doing the dispatch/combine on
+    local shards and psumming the combined [B,S,D] cuts the MoE collective
+    volume ~(k·cf + shared)× — the dominant term of the qwen2-moe train cell.
+    Falls back to ``moe_sorted`` when no mesh context is active.
+    """
+    from ..distributed.context import dp_axes_active, get_mesh
+    mesh = get_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return moe_sorted(p, cfg, x)
+    from jax.sharding import PartitionSpec as P
+    dp = dp_axes_active() or ("data",)
+    dpa = dp if len(dp) > 1 else dp[0]
+    w, ids, aux = _router(p, cfg, x)
+
+    has_shared = bool(cfg.n_shared_experts)
+
+    def body(xb, wb, idb, wg, wu, wd, sg, su, sd):
+        y = _sorted_core(cfg, xb, wb, idb, wg, wu, wd)
+        if has_shared:
+            g = jnp.einsum("bsd,edf->ebsf", xb, sg)
+            u = jnp.einsum("bsd,edf->ebsf", xb, su)
+            y = y + jnp.einsum("ebsf,efd->bsd", _act(g, cfg.act) * u, sd)
+        return jax.lax.psum(y, "model")
+
+    shared = p.get("shared", None)
+    if not has_shared:
+        # zero-size replicated stand-ins keep one code path
+        z = jnp.zeros((0, cfg.d_model, 1), x.dtype)
+        sg = su = z
+        sd = jnp.zeros((0, 1, cfg.d_model), x.dtype)
+        shared_specs = (P(), P(), P())
+    else:
+        sg, su, sd = shared["w_gate"], shared["w_up"], shared["w_down"]
+        shared_specs = (P(None, None, "model"), P(None, None, "model"),
+                        P(None, "model", None))
+
+    y = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dpa, None, None), P(dpa, None, None), P(dpa, None, None),
+                  P(None, None, "model"), P(None, None, "model"),
+                  P(None, "model", None)) + shared_specs,
+        out_specs=P(dpa, None, None),
+        check_vma=False,
+    )(x, w, ids, p["w_gate"], p["w_up"], p["w_down"], sg, su, sd)
+    return y, aux
+
+
+def moe_block(p: Params, cfg: ModelConfig, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    if cfg.moe_impl == "dense":
+        return moe_dense(p, cfg, x)
+    if cfg.moe_impl == "sorted_smap":
+        return moe_sorted_smap(p, cfg, x)
+    return moe_sorted(p, cfg, x)

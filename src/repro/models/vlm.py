@@ -1,0 +1,63 @@
+"""LLaVA-style VLM backbone.
+
+The vision tower is a STUB per the assignment: ``input_specs`` supplies
+precomputed anyres patch embeddings [B, n_patches, d_model] (what the CLIP
+tower + projector would emit).  The backbone is a dense decoder-only LM;
+patch embeddings are prepended to the text embeddings, the loss covers text
+positions only.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import (Params, cross_entropy_loss, dtype_of, embed, rms_norm,
+                     unembed)
+from .transformer import TransformerLM
+
+__all__ = ["VlmLM"]
+
+
+class VlmLM(TransformerLM):
+    """TransformerLM with injected patch embeddings."""
+
+    def _inject(self, params: Params, tokens: jax.Array,
+                patches: jax.Array) -> jax.Array:
+        text = embed(params["emb"], tokens, self.cfg.embed_scale)
+        return jnp.concatenate([patches.astype(text.dtype), text], axis=1)
+
+    def _forward_embeds(self, params: Params, x: jax.Array, mode: str
+                        ) -> jax.Array:
+        cfg = self.cfg
+        positions = jnp.arange(x.shape[1])[None, :]
+        from .transformer import block_forward
+
+        def scan_fn(carry, lp):
+            y, aux = block_forward(lp, cfg, carry, positions, self.impl)
+            return self.constraint(y), aux
+
+        if cfg.remat and mode == "train":
+            scan_fn = jax.checkpoint(scan_fn)
+        x, _ = jax.lax.scan(scan_fn, self.constraint(x), params["layers"])
+        return rms_norm(params["final_norm"], x)
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        x = self._inject(params, batch["tokens"], batch["patch_embeds"])
+        x = self._forward_embeds(params, x, mode="train")
+        n_p = batch["patch_embeds"].shape[1]
+        ce = cross_entropy_loss(params["emb"], x[:, n_p:], batch["labels"],
+                                cfg.loss_chunk, vocab_valid=cfg.vocab_size)
+        return ce, {"ce": ce}
+
+    def prefill(self, params: Params, tokens: jax.Array, max_seq: int,
+                patch_embeds: jax.Array = None) -> Tuple[Params, jax.Array]:
+        if patch_embeds is None:
+            return super().prefill(params, tokens, max_seq)
+        x = self._inject(params, tokens, patch_embeds)
+        # full prefill incl. KV-cache assembly (shared with the text path)
+        return self.prefill_embeds(params, x, max_seq)

@@ -1,0 +1,12 @@
+"""Optimizers & distributed-optimization tricks."""
+from .adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+from .schedule import cosine_schedule, linear_warmup
+from .compression import (compress_int8, decompress_int8,
+                          ErrorFeedbackState, ef_init, ef_compress_update)
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "cosine_schedule", "linear_warmup",
+    "compress_int8", "decompress_int8",
+    "ErrorFeedbackState", "ef_init", "ef_compress_update",
+]

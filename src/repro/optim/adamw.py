@@ -1,0 +1,92 @@
+"""AdamW with bf16 params + fp32 master/moments (mixed-precision training).
+
+State layout is a plain pytree mirroring the parameter tree, so the
+ZeRO-1 sharding rules (``ShardingRules.opt_specs``) apply leaf-by-leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm"]
+
+Params = Any
+
+
+@dataclasses.dataclass
+class AdamWState:
+    """Pytree-registered optimizer state."""
+
+    step: jax.Array
+    master: Params               # fp32 master weights
+    m: Params
+    v: Params
+
+    def tree_flatten(self):
+        return (self.step, self.master, self.m, self.v), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    AdamWState,
+    lambda s: s.tree_flatten(),
+    lambda aux, c: AdamWState.tree_unflatten(aux, c))
+
+
+def adamw_init(params: Params) -> AdamWState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree_util.tree_map(f32, params),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def adamw_update(grads: Params, state: AdamWState, params: Params,
+                 lr: jax.Array, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 max_grad_norm: float = 1.0
+                 ) -> Tuple[Params, AdamWState, Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / c1
+        vh = v / c2
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + eps)
+                                    + weight_decay * master)
+        return m, v, new_master
+
+    flat = jax.tree_util.tree_map(upd, grads, state.m, state.v, state.master)
+    new_m = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_master = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree_util.tree_map(
+        lambda mw, p: mw.astype(p.dtype), new_master, params)
+    new_state = AdamWState(step=step, master=new_master, m=new_m, v=new_v)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,95 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+At pod scale the DP all-reduce of grok/llama-sized gradients dominates ICI
+traffic (the roofline collective term).  int8 block-quantized compression
+with error feedback cuts the all-reduce payload 2x vs bf16 while error
+feedback keeps the quantization noise from accumulating (Seide et al.;
+1-bit Adam lineage).
+
+The compressed representative is a (int8 values, fp32 per-block scales)
+pair; ``ef_compress_update`` is the drop-in used by the Trainer when
+``grad_compression=int8`` is enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_int8", "decompress_int8", "ErrorFeedbackState",
+           "ef_init", "ef_compress_update"]
+
+Params = Any
+BLOCK = 256
+
+
+def _pad_to_block(x: jax.Array) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), pad
+
+
+def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Block-quantize to (int8 [N/B, B], scales fp32 [N/B])."""
+    blocks, _ = _pad_to_block(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, shape, dtype
+                    ) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+@dataclasses.dataclass
+class ErrorFeedbackState:
+    residual: Params
+
+    def tree_flatten(self):
+        return (self.residual,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    ErrorFeedbackState,
+    lambda s: s.tree_flatten(),
+    lambda aux, c: ErrorFeedbackState.tree_unflatten(aux, c))
+
+
+def ef_init(params: Params) -> ErrorFeedbackState:
+    return ErrorFeedbackState(residual=jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def ef_compress_update(grads: Params, ef: ErrorFeedbackState
+                       ) -> Tuple[Params, ErrorFeedbackState]:
+    """Compress+decompress each grad leaf with error feedback.
+
+    The round-trip models the all-reduce payload being int8 on the wire;
+    the quantization error is carried to the next step instead of lost.
+    """
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        q, s = compress_int8(target)
+        restored = decompress_int8(q, s, g.shape, jnp.float32)
+        return restored.astype(g.dtype), target - restored
+
+    out = jax.tree_util.tree_map(one, grads, ef.residual)
+    new_g = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, ErrorFeedbackState(residual=new_r)

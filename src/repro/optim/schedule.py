@@ -1,0 +1,20 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["linear_warmup", "cosine_schedule"]
+
+
+def linear_warmup(step, warmup: int, peak: float):
+    s = jnp.asarray(step, jnp.float32)
+    return peak * jnp.minimum(1.0, s / jnp.maximum(1.0, float(warmup)))
+
+
+def cosine_schedule(step, warmup: int, total: int, peak: float,
+                    floor: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak * jnp.minimum(1.0, s / jnp.maximum(1.0, float(warmup)))
+    t = jnp.clip((s - warmup) / jnp.maximum(1.0, float(total - warmup)), 0, 1)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,4 @@
+from .trainer import Trainer
+from .server import Request, Server
+
+__all__ = ["Trainer", "Server", "Request"]

@@ -1,0 +1,129 @@
+"""Family-agnostic train / prefill / decode step builders.
+
+Each builder returns a pure function suitable for ``jax.jit`` with explicit
+in/out shardings; activation sharding constraints (sequence parallelism on
+the residual stream) are applied inside the model via the ``constraint``
+hook so XLA's SPMD partitioner sees a fully-annotated program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..configs.shapes import ShapeConfig
+from ..optim.adamw import AdamWState, adamw_init, adamw_update
+from ..optim.compression import ef_compress_update
+from ..optim.schedule import cosine_schedule
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "make_input_specs", "init_all"]
+
+
+def make_train_step(model, cfg: ModelConfig, peak_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10000,
+                    grad_compression: Optional[str] = None
+                    ) -> Callable:
+    def grads_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state: AdamWState, batch, ef_state=None):
+        M = max(1, cfg.microbatch)
+        if M > 1:
+            # gradient accumulation: M sequential microbatches per step —
+            # activation live-set shrinks M×, grads accumulate in fp32
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]),
+                batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, one):
+                (l, m), g = grads_of(params, one)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return acc, (l, m)
+
+            gsum, (losses, metricses) = jax.lax.scan(body, zeros, mb)
+            grads = jax.tree_util.tree_map(lambda g: g / M, gsum)
+            loss = jnp.mean(losses)
+            metrics = jax.tree_util.tree_map(jnp.mean, metricses)
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+        if grad_compression == "int8" and ef_state is not None:
+            grads, ef_state = ef_compress_update(grads, ef_state)
+        lr = cosine_schedule(opt_state.step, warmup, total_steps, peak_lr)
+        new_params, new_opt, om = adamw_update(grads, opt_state, params, lr)
+        out_metrics = {"loss": loss, **metrics, **om}
+        if ef_state is not None:
+            return new_params, new_opt, out_metrics, ef_state
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(model, cfg: ModelConfig, max_seq: int) -> Callable:
+    if cfg.family == "audio":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["frames"], batch["tokens"],
+                                 max_seq)
+    elif cfg.family == "vlm":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["tokens"], max_seq,
+                                 patch_embeds=batch["patch_embeds"])
+    else:
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["tokens"], max_seq)
+    return prefill_step
+
+
+def make_decode_step(model, cfg: ModelConfig) -> Callable:
+    def decode_step(params, state, tokens):
+        return model.decode_step(params, state, tokens)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation, dry-run pattern)
+# ---------------------------------------------------------------------------
+def make_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                     ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch stand-ins for one (arch × shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.dtype(cfg.param_dtype)
+    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), i32)
+
+    if shape.kind == "decode":
+        return {"tokens": tok(B, 1)}
+
+    if cfg.family == "audio":
+        S_dec = max(S // cfg.enc_seq_ratio, 1)
+        return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), bf16),
+                "tokens": tok(B, S_dec), "labels": tok(B, S_dec)}
+    if cfg.family == "vlm":
+        S_text = S - cfg.n_patches
+        out = {"tokens": tok(B, S_text),
+               "patch_embeds": jax.ShapeDtypeStruct(
+                   (B, cfg.n_patches, cfg.d_model), bf16)}
+        if shape.kind == "train":
+            out["labels"] = tok(B, S_text)
+        return out
+    out = {"tokens": tok(B, S)}
+    if shape.kind == "train":
+        out["labels"] = tok(B, S)
+    return out
+
+
+def init_all(model, cfg: ModelConfig, key: Optional[jax.Array] = None
+             ) -> Tuple[Any, AdamWState]:
+    """(params, opt_state) — run under ``jax.eval_shape`` for the dry-run."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    params = model.init_params(key)
+    return params, adamw_init(params)

@@ -1,0 +1,47 @@
+"""Inline vs direct data-movement protocols (paper §6.2 analogue)."""
+import numpy as np
+import pytest
+
+from repro.core import (HybridMover, INLINE_THRESHOLD_DEFAULT, direct_put,
+                        inline_put, sweep_transfer)
+
+
+def test_inline_put_roundtrip():
+    x = np.arange(512, dtype=np.float32)
+    y, rec = inline_put(x)
+    np.testing.assert_array_equal(np.asarray(y), x)
+    assert rec.mode == "inline"
+    assert rec.nbytes == x.nbytes
+
+
+def test_direct_put_roundtrip():
+    x = np.arange(4096, dtype=np.int32)
+    y, rec = direct_put(x)
+    np.testing.assert_array_equal(np.asarray(y), x)
+    assert rec.mode == "direct"
+
+
+def test_hybrid_mover_threshold_switch():
+    mover = HybridMover(threshold=1024)
+    _, small = mover.put(np.zeros(16, np.float32))      # 64 B
+    _, large = mover.put(np.zeros(4096, np.float32))    # 16 KiB
+    assert small.mode == "inline"
+    assert large.mode == "direct"
+    assert mover.stats() == {"inline": 1, "direct": 1}
+
+
+def test_threshold_is_tunable_unlike_cuda():
+    """The paper (§7): CUDA's protocol switch is opaque; ours is a knob."""
+    always_direct = HybridMover(threshold=0)
+    _, rec = always_direct.put(np.zeros(4, np.uint8))
+    assert rec.mode == "direct"
+    always_inline = HybridMover(threshold=1 << 40)
+    _, rec = always_inline.put(np.zeros(1 << 16, np.uint8))
+    assert rec.mode == "inline"
+    assert INLINE_THRESHOLD_DEFAULT == 24 * 1024  # the paper's switch point
+
+
+def test_sweep_shapes():
+    out = sweep_transfer([64, 1024], mode="direct", iters=3, warmup=1)
+    assert [r["nbytes"] for r in out] == [64, 1024]
+    assert all(r["latency_us"] > 0 for r in out)

@@ -1,0 +1,43 @@
+"""Graph launch modes: doorbell counts + command-footprint law (§6.3)."""
+import numpy as np
+import pytest
+
+from repro.core import ExecGraph, MultiStepLauncher
+
+import jax
+import jax.numpy as jnp
+
+
+@pytest.mark.parametrize("mode", ["per_op", "graphed", "multistep"])
+def test_launch_modes_correct(mode):
+    g = ExecGraph(chain_len=12, width=64)
+    y, st = g.launch(mode)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(g.reference()),
+                               rtol=1e-5)
+    assert st.doorbells == (12 if mode == "per_op" else 1)
+
+
+def test_footprint_scaling_law():
+    """per_op: bytes ∝ K; graphed: grows with K; multistep: O(1)."""
+    sizes = {}
+    for K in (8, 32):
+        for mode in ("per_op", "graphed", "multistep"):
+            g = ExecGraph(chain_len=K, width=64)
+            g.upload(mode)
+            sizes[(mode, K)] = g.command_footprint(mode)[0]
+    assert sizes[("per_op", 32)] == 4 * sizes[("per_op", 8)]
+    assert sizes[("graphed", 32)] > sizes[("graphed", 8)]
+    ratio = sizes[("multistep", 32)] / sizes[("multistep", 8)]
+    assert ratio < 1.1  # O(1) footprint
+
+
+def test_multistep_launcher_matches_sequential():
+    def step(carry, b):
+        return carry + b, carry.sum()
+
+    launcher = MultiStepLauncher(step, k=5)
+    carry = jnp.zeros((4,))
+    batches = jnp.ones((5, 4))
+    (final, auxs) = launcher(carry, batches)
+    np.testing.assert_allclose(np.asarray(final), 5 * np.ones(4), rtol=1e-6)
+    assert launcher.tracker.count == 1  # ONE doorbell for 5 steps

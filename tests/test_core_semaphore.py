@@ -1,0 +1,37 @@
+"""Progress trackers (memory-semaphore protocol) + heartbeats."""
+import time
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Heartbeat, ProgressTracker
+
+
+def test_release_wait_elapsed():
+    pt = ProgressTracker()
+    a = pt.release(jnp.ones((8,)) * 3)
+    b = pt.release(jnp.ones((8,)) * 4)
+    dt = pt.elapsed(a, b)
+    assert a.completed and b.completed
+    assert dt >= 0
+    assert a.payload != b.payload
+
+
+def test_payload_ordering():
+    pt = ProgressTracker()
+    toks = [pt.release(jnp.zeros(2)) for _ in range(5)]
+    assert [t.payload for t in toks] == [1, 2, 3, 4, 5]
+
+
+def test_heartbeat_straggler_detection():
+    hb = Heartbeat(3, factor=3.0)
+    t = 0.0
+    for i in range(10):  # workers 0,1 beat every 1s; worker 2 stops at t=3
+        hb.beat(0, t)
+        hb.beat(1, t)
+        if t <= 3:
+            hb.beat(2, t)
+        t += 1.0
+    assert hb.stragglers(now=t) == [2]
+    assert hb.dead(timeout_s=5.0, now=t) == [2]
+    assert hb.dead(timeout_s=100.0, now=t) == []

@@ -1,0 +1,84 @@
+"""Command-stream parser: trip counts, collectives, footprint."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import capture_fn, parse_hlo
+from repro.core.hlo import _link_bytes, _group_size
+
+
+def test_scan_trip_count_weighting():
+    W = jnp.zeros((64, 64), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ W), ()
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    cs = capture_fn(f, jax.ShapeDtypeStruct((8, 64), jnp.float32))
+    # 7 iterations x 2*8*64*64 flops; cost_analysis reports body once
+    expect = 7 * 2 * 8 * 64 * 64
+    assert cs.flops == pytest.approx(expect, rel=0.15)
+    assert cs.xla_flops == pytest.approx(expect / 7, rel=0.15)
+    assert not cs.stream.unknown_trip_counts
+
+
+def test_unrolled_matches_scan_flops():
+    W = jnp.zeros((32, 32), jnp.float32)
+
+    def scan_f(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ W, ()), x, None, length=5)
+        return y
+
+    def unroll_f(x):
+        for _ in range(5):
+            x = x @ W
+        return x
+
+    a = capture_fn(scan_f, jax.ShapeDtypeStruct((4, 32), jnp.float32))
+    b = capture_fn(unroll_f, jax.ShapeDtypeStruct((4, 32), jnp.float32))
+    assert a.flops == pytest.approx(b.flops, rel=0.05)
+
+
+def test_link_bytes_accounting():
+    # all-gather: receive (n-1)/n of the gathered buffer
+    assert _link_bytes("all-gather", 1024, 256, 4) == 768
+    # all-reduce: ring = 2x operand x (n-1)/n
+    assert _link_bytes("all-reduce", 256, 256, 4) == 384
+    # reduce-scatter: send (n-1)/n of the operand
+    assert _link_bytes("reduce-scatter", 256, 1024, 4) == 768
+    assert _link_bytes("collective-permute", 256, 256, 4) == 256
+    assert _link_bytes("all-reduce", 256, 256, 1) == 0
+
+
+def test_group_size_parsing():
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert _group_size("replica_groups=[4,2]<=[2,4]T(1,0)") == 2
+    assert _group_size("replica_groups=[2,16]<=[32]") == 16
+    assert _group_size("no groups here") == 1
+
+
+def test_footprint_nonzero_and_entries_decoded():
+    def f(x):
+        return jnp.sum(x * 2.0)
+
+    cs = capture_fn(f, jax.ShapeDtypeStruct((128,), jnp.float32))
+    assert cs.command_bytes > 0
+    assert cs.n_ops >= 1
+    assert all(e.opcode for e in cs.stream.entries)
+
+
+def test_dus_inplace_accounting():
+    """DUS into a big buffer must charge slice-size, not buffer-size."""
+    def f(buf, upd):
+        def body(c, i):
+            return jax.lax.dynamic_update_slice(c, upd, (i, 0)), ()
+        y, _ = jax.lax.scan(body, buf, jnp.arange(64))
+        return y
+
+    cs = capture_fn(f, jax.ShapeDtypeStruct((64, 256), jnp.float32),
+                    jax.ShapeDtypeStruct((1, 256), jnp.float32))
+    # naive accounting would be 64 iters x 2 x 64x256x4B = 8.4 MB
+    assert cs.memory_bytes < 3_000_000

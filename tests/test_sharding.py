@@ -1,0 +1,110 @@
+"""Sharding rules: spec resolution, divisibility fallback, ZeRO-1 (host-only,
+no devices needed — specs are pure functions of paths/shapes)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, resolve
+from repro.distributed import sharding as sh
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis_names + shape dict (no devices touched)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+    @property
+    def size(self):
+        n = 1
+        for v in self.shape.values():
+            n *= v
+        return n
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _rules(arch, mesh=MESH, **kw):
+    cfg = resolve(ARCHS[arch], model_axis=mesh.shape["model"])
+    return sh.ShardingRules(mesh, cfg, **kw), cfg
+
+
+def test_attention_tp_specs():
+    rules, cfg = _rules("deepseek-7b")
+    assert rules.param_spec("layers/attn/wq", (30, 4096, 32, 128)) == \
+        P(None, None, "model", None)
+    assert rules.param_spec("layers/attn/wo", (30, 32, 128, 4096)) == \
+        P(None, "model", None, None)
+    assert rules.param_spec("layers/mlp/w_gate", (30, 4096, 11008)) == \
+        P(None, None, "model")
+    assert rules.param_spec("emb/embed", (102400, 4096)) == P("model", None)
+
+
+def test_kv_heads_replicated_when_indivisible():
+    rules, cfg = _rules("llama3-405b")  # kv=8 on 16-way model axis
+    spec = rules.param_spec("layers/attn/wk", (126, 16384, 8, 128))
+    assert spec == P(None, ("pod", "data") if False else ("data",), None, None) \
+        or spec[2] is None  # kv-head dim must NOT be model-sharded
+    assert len(rules.dropped) >= 1
+
+
+def test_fsdp_adds_dp_axis():
+    rules, cfg = _rules("llama3-405b")
+    assert cfg.fsdp
+    spec = rules.param_spec("layers/mlp/w_gate", (126, 16384, 53248))
+    assert spec == P(None, ("data",), "model")
+    rules_mp, _ = _rules("llama3-405b", mesh=MESH_MP)
+    spec = rules_mp.param_spec("layers/mlp/w_gate", (126, 16384, 53248))
+    assert spec == P(None, ("pod", "data"), "model")
+
+
+def test_zero1_opt_state_sharded_over_dp():
+    rules, cfg = _rules("deepseek-7b")  # fsdp off -> ZeRO-1 adds dp
+    spec = rules.opt_spec("m/layers/mlp/w_gate", (30, 4096, 11008))
+    flat = [a for ax in spec for a in (ax if isinstance(ax, tuple) else (ax,))]
+    assert "data" in flat and "model" in flat
+
+
+def test_norms_replicated():
+    rules, _ = _rules("qwen3-8b")
+    assert rules.param_spec("layers/ln1/scale", (36, 4096)) == P()
+
+
+def test_vocab_and_head_padding():
+    cfg = resolve(ARCHS["whisper-medium"], 16)
+    assert cfg.vocab_padded % 16 == 0 and cfg.vocab_padded >= 51865
+    cfg = resolve(ARCHS["llava-next-34b"], 16)
+    assert cfg.n_heads_padded == 64
+    cfg = resolve(ARCHS["mamba2-780m"], 16)
+    assert cfg.vocab_padded % 16 == 0
+    # already-divisible archs stay exact
+    cfg = resolve(ARCHS["gemma-2b"], 16)
+    assert cfg.vocab_padded == 256000
+
+
+def test_batch_spec_fallback_batch1():
+    rules, _ = _rules("jamba-v0.1-52b")
+    assert rules.batch_spec(256) == "data"
+    assert rules.batch_spec(1) is None  # long_500k: replicate batch
+
+
+def test_kv_cache_seq_sharding_when_heads_indivisible():
+    rules, _ = _rules("llama3-405b")
+    # [L, B, S, Hkv, hd] with kv=8 (indivisible): sequence gets 'model'
+    spec = rules.state_spec("k", (126, 128, 32768, 8, 128))
+    assert spec[2] == "model" and spec[3] is None
+    assert spec[1] == "data"
+    # batch=1 long-context: seq picks up data too
+    spec1 = rules.state_spec("k", (4, 1, 1, 524288, 8, 128))
+    assert spec1[3] == ("data", "model")
+
+
+def test_moe_expert_internal_tp():
+    rules, _ = _rules("grok-1-314b")
+    spec = rules.param_spec("layers/moe/w_gate", (64, 8, 6144, 32768))
+    assert spec[-1] == "model"
+    assert spec[1] is None  # experts replicated in baseline

@@ -1,0 +1,164 @@
+"""Substrate: optimizer, compression, data pipeline, checkpoint, FT."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_ARCHS
+from repro.configs.shapes import ShapeConfig
+from repro.data.pipeline import SyntheticTokens, make_pipeline
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         compress_int8, decompress_int8, cosine_schedule,
+                         ef_init, ef_compress_update)
+from repro.runtime.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.runtime.fault_tolerance import (FaultPolicy, FleetMonitor,
+                                           plan_elastic_mesh)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------------ optim
+def test_adamw_reduces_quadratic_loss():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(g, opt, params, lr=0.05,
+                                      weight_decay=0.0)
+    assert float(loss(params)) < 1e-2
+
+
+def test_grad_clip():
+    g = {"a": jnp.ones((4,)) * 100.0}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(200.0)
+    norm = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert norm == pytest.approx(1.0, rel=1e-3)
+
+
+def test_cosine_schedule_monotone_regions():
+    w, total, peak = 10, 100, 1.0
+    lrs = [float(cosine_schedule(s, w, total, peak)) for s in range(100)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(peak, rel=1e-3)
+    assert lrs[-1] < lrs[15]
+
+
+# ------------------------------------------------------------------ compression
+def test_int8_roundtrip_error_small():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1000,)) * 0.01,
+                    jnp.float32)
+    q, s = compress_int8(x)
+    y = decompress_int8(q, s, x.shape, jnp.float32)
+    rel = float(jnp.linalg.norm(y - x) / jnp.linalg.norm(x))
+    assert rel < 0.01
+    assert q.dtype == jnp.int8
+
+
+def test_error_feedback_preserves_signal():
+    """With EF, the accumulated compressed sum tracks the true sum."""
+    g = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(512,)) * 1e-4,
+                          jnp.float32)}
+    ef = ef_init(g)
+    acc = jnp.zeros((512,))
+    for _ in range(20):
+        cg, ef = ef_compress_update(g, ef)
+        acc = acc + cg["w"]
+    true = 20 * g["w"]
+    rel = float(jnp.linalg.norm(acc - true) / jnp.linalg.norm(true))
+    assert rel < 0.05
+
+
+# ------------------------------------------------------------------ data
+def test_pipeline_deterministic_and_host_sharded():
+    cfg = SMOKE_ARCHS["deepseek-7b"]
+    shape = ShapeConfig("t", 32, 8, "train")
+    a = SyntheticTokens(cfg, shape, seed=3).batch_at(17)
+    b = SyntheticTokens(cfg, shape, seed=3).batch_at(17)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticTokens(cfg, shape, seed=3).batch_at(18)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    h0 = SyntheticTokens(cfg, shape, seed=3, host_id=0, n_hosts=2)
+    h1 = SyntheticTokens(cfg, shape, seed=3, host_id=1, n_hosts=2)
+    assert h0.host_batch == 4
+    assert not np.array_equal(h0.batch_at(0)["tokens"],
+                              h1.batch_at(0)["tokens"])
+    assert a["tokens"].max() < cfg.vocab_size
+
+
+def test_prefetcher_orders_steps():
+    cfg = SMOKE_ARCHS["deepseek-7b"]
+    pipe = make_pipeline(cfg, ShapeConfig("t", 32, 4, "train"),
+                         start_step=5)
+    s0, _ = pipe.next()
+    s1, _ = pipe.next()
+    pipe.stop()
+    assert (s0, s1) == (5, 6)
+
+
+# ------------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip_bf16():
+    tree = {"a": jnp.asarray([[1.5, -2.25]], jnp.bfloat16),
+            "b": {"c": jnp.arange(6, dtype=jnp.int32)}}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 7, tree, extra={"next_step": 8})
+        out, step, extra = restore(d, tree)
+        assert step == 7 and extra["next_step"] == 8
+        np.testing.assert_array_equal(np.asarray(out["a"], np.float32),
+                                      np.asarray(tree["a"], np.float32))
+        assert out["a"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(out["b"]["c"]),
+                                      np.asarray(tree["b"]["c"]))
+
+
+def test_checkpoint_manager_retention():
+    tree = {"w": jnp.zeros((4,))}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep_last_n=2, every_steps=1)
+        for s in (1, 2, 3, 4):
+            mgr.maybe_save(s, tree)
+        mgr.wait()
+        mgr._gc()
+        steps = sorted(int(x.split("_")[1]) for x in os.listdir(d)
+                       if x.startswith("step_"))
+        assert steps == [3, 4]
+        assert latest_step(d) == 4
+
+
+def test_checkpoint_atomicity_no_tmp_left():
+    tree = {"w": jnp.zeros((4,))}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, tree)
+        assert not any(x.startswith("tmp.") for x in os.listdir(d))
+
+
+# ------------------------------------------------------------------ fault tolerance
+def test_fleet_monitor_detects_dead_and_restarts():
+    mon = FleetMonitor(4, FaultPolicy(dead_timeout_s=5.0))
+    t = 0.0
+    for i in range(8):
+        for w in range(4):
+            if w == 2 and t > 3:
+                continue  # worker 2 dies at t=3
+            mon.step_completed(w, t)
+        t += 1.0
+    stragglers, dead = mon.check(now=t + 5)
+    assert 2 in dead
+    assert mon.should_restart(dead)
+
+
+def test_plan_elastic_mesh_divisibility():
+    # llama3-like dims: after losing chips, model axis must still divide
+    dims = [53248, 128, 16384]
+    assert plan_elastic_mesh(256, dims) == (16, 16)
+    data, model = plan_elastic_mesh(240, dims)  # lost a host (16 chips)
+    assert data * model <= 240
+    assert all(d % model == 0 for d in dims)
+    assert plan_elastic_mesh(7, [5, 3]) == (7, 1)  # degenerate fallback
