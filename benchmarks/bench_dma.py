@@ -6,11 +6,16 @@ Sweeps transfer size over both protocols and reports:
     the analogue of Table 2's Nsight-vs-raw decomposition: ``overhead_pct``
     is the fraction of end-to-end latency not explained by the payload
     movement itself (measured at the smallest size as the per-call floor).
+
+Transfers report into the ambient :class:`repro.core.TraceSession` (the
+harness in ``run.py`` installs one), so every put lands on the unified
+submission timeline alongside the other sections' events.
 """
 from __future__ import annotations
 
 from typing import List
 
+from repro.core import current_session
 from repro.core.dma import sweep_transfer
 
 EXP_SIZES = [4 * (2 ** i) for i in range(13)]          # 4 B .. 16 KiB
@@ -38,6 +43,10 @@ def run() -> List[str]:
         rows.append(
             f"dma_direct_large,{r['nbytes']},{r['latency_us']:.2f},"
             f"{r['bandwidth_gib_s']:.3f},")
+    sess = current_session()
+    if sess is not None:
+        rows.append(
+            f"dma_trace_events,{len(sess.timeline(kinds='transfer'))},,,")
     return rows
 
 

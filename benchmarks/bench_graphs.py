@@ -5,21 +5,26 @@ Chain lengths sweep 1→2000 (paper's range).  Per (mode, K):
   * command bytes     — Fig. 7c/d (footprint)
   * doorbell writes   — Fig. 7e/f
   * fitted command-emission bandwidth (MiB/s) — Fig. 9's slope
+
+Launches report ``graph_launch`` (and per-op ``dispatch``) events into the
+session passed by the harness — or the ambient one — so the footprint law is
+visible on the same timeline as the DMA and trainer sections.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
-from repro.core import ExecGraph
+from repro.core import ExecGraph, TraceSession
 
 CHAINS_SHORT = [1, 10, 25, 50, 100, 200]
 CHAINS_LONG = [500, 1000, 2000]
 MODES = ("per_op", "graphed", "multistep")
 
 
-def run(width: int = 4096) -> List[str]:
+def run(width: int = 4096,
+        session: Optional[TraceSession] = None) -> List[str]:
     rows: List[str] = []
     fits = {m: ([], []) for m in MODES}
     for K in CHAINS_SHORT + CHAINS_LONG:
@@ -28,8 +33,8 @@ def run(width: int = 4096) -> List[str]:
                 continue  # python-loop dispatch at K=2000 adds no information
             g = ExecGraph(chain_len=K, width=width)
             g.upload(mode)
-            _, st = g.launch(mode)       # warm
-            _, st = g.launch(mode)
+            _, st = g.launch(mode, session=session)       # warm
+            _, st = g.launch(mode, session=session)
             rows.append(
                 f"graph_{mode},{K},{st.launch_s*1e6:.1f},"
                 f"{st.command_bytes},{st.doorbells},{st.upload_s*1e3:.1f}")

@@ -4,59 +4,66 @@ Splits one end-to-end jitted call into the stages the paper wants
 attributable: trace+lower (driver translate), compile (instantiate),
 dispatch (doorbell), execute (engine).  Also measures the Trainer's
 multi-step launch economy: host µs per train step vs steps-per-dispatch K.
+
+Both halves report through ONE :class:`repro.core.TraceSession`: the stage
+split goes through ``session.capture`` / ``session.wrap`` and the trainers
+are constructed with ``session=`` — so compile, dispatch, and progress events
+from all of them interleave on a single submission-ordered timeline.
 """
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import SMOKE_ARCHS
 from repro.configs.shapes import ShapeConfig
+from repro.core import TraceSession
 from repro.runtime.trainer import Trainer
 
 
-def _stage_split(width: int = 1024) -> List[str]:
+def _stage_split(width: int = 1024,
+                 session: Optional[TraceSession] = None) -> List[str]:
+    sess = session or TraceSession(name="stage_split")
     W = jnp.zeros((width, width), jnp.float32)
 
     def f(x):
         return jnp.tanh(x @ W).sum()
 
     x = jnp.ones((8, width))
-    t0 = time.perf_counter()
-    lowered = jax.jit(f).lower(x)
-    t1 = time.perf_counter()
-    compiled = lowered.compile()
+    cs = sess.capture.lower_and_compile("stage_split", f, args=(x,))
+    compiled = cs.compiled
     t2 = time.perf_counter()
     out = compiled(x)                     # dispatch (async)
     t3 = time.perf_counter()
     jax.block_until_ready(out)
     t4 = time.perf_counter()
-    # steady-state dispatch
+    # steady-state dispatch, doorbell-wrapped onto the shared timeline
+    steady = sess.wrap(compiled, "stage_steady_call", block=True)
     times = []
     for _ in range(20):
         s = time.perf_counter()
-        out = compiled(x)
-        jax.block_until_ready(out)
+        steady(x)
         times.append(time.perf_counter() - s)
     times.sort()
     return [
-        f"stage_trace_lower,,{(t1-t0)*1e6:.1f},,,",
-        f"stage_compile,,{(t2-t1)*1e6:.1f},,,",
+        f"stage_trace_lower,,{cs.lower_time_s*1e6:.1f},,,",
+        f"stage_compile,,{cs.compile_time_s*1e6:.1f},,,",
         f"stage_first_dispatch,,{(t3-t2)*1e6:.1f},,,",
         f"stage_first_complete,,{(t4-t3)*1e6:.1f},,,",
         f"stage_steady_call,,{times[len(times)//2]*1e6:.1f},,,",
     ]
 
 
-def _multistep_economy() -> List[str]:
+def _multistep_economy(session: Optional[TraceSession] = None) -> List[str]:
     rows = []
     cfg = SMOKE_ARCHS["deepseek-7b"]
     shape = ShapeConfig("bench", 64, 4, "train")
     for k in (1, 4, 16):
-        tr = Trainer(cfg, shape, steps_per_launch=k, seed=0)
+        tr = Trainer(cfg, shape, steps_per_launch=k, seed=0,
+                     session=session)
         out = tr.train(16)
         rows.append(
             f"trainer_k{k},{out['steps']},"
@@ -66,8 +73,8 @@ def _multistep_economy() -> List[str]:
     return rows
 
 
-def run() -> List[str]:
-    return _stage_split() + _multistep_economy()
+def run(session: Optional[TraceSession] = None) -> List[str]:
+    return _stage_split(session=session) + _multistep_economy(session=session)
 
 
 HEADER = "name,steps,us_per_step,doorbells,steps_per_doorbell,final_loss"

@@ -8,9 +8,15 @@
 Prints ``name,value...`` CSV blocks.  Wall-clock numbers are host (CPU
 container) figures; device-side terms come from the dry-run roofline
 (EXPERIMENTS.md), not from here.
+
+ONE :class:`repro.core.TraceSession` spans every section — installed as the
+ambient session and passed explicitly where a section builds its own objects
+— so the final block is the unified, submission-ordered event summary across
+DMA, graph-launch, and trainer benchmarks.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -47,14 +53,20 @@ def bench_kernels_rows():
 
 
 def main() -> None:
+    from repro.core import TraceSession
+
     from . import bench_dma, bench_graphs, bench_submission
-    _section("DMA protocols (Fig.6 / Table 2)", bench_dma.HEADER,
-             bench_dma.run())
-    _section("Graph launch scaling (Fig.7/9/10)", bench_graphs.HEADER,
-             bench_graphs.run())
-    _section("Submission stage split (§6.2/§7)", bench_submission.HEADER,
-             bench_submission.run())
-    _section("Kernel interpret-mode timings", "name,ms", bench_kernels_rows())
+    with TraceSession(name="benchmarks") as sess:
+        _section("DMA protocols (Fig.6 / Table 2)", bench_dma.HEADER,
+                 bench_dma.run())
+        _section("Graph launch scaling (Fig.7/9/10)", bench_graphs.HEADER,
+                 bench_graphs.run(session=sess))
+        _section("Submission stage split (§6.2/§7)", bench_submission.HEADER,
+                 bench_submission.run(session=sess))
+        _section("Kernel interpret-mode timings", "name,ms",
+                 bench_kernels_rows())
+    print("# === Unified trace session ===")
+    print(json.dumps(sess.summary(), indent=2, sort_keys=True))
 
 
 if __name__ == "__main__":

@@ -1,8 +1,13 @@
 """Tour of the command-stream methodology (the paper, end to end).
 
-1. Listing-1 analogue: decode the submission of a serve step.
-2. §6.2 analogue: inline vs direct data movement + the tunable threshold.
-3. §6.3 analogue: the command-footprint law across launch modes.
+One :class:`repro.core.TraceSession` spans the whole tour — the watchpoint
+analogue: every submission passes through it exactly once, whichever
+subsystem made it.
+
+1. Listing-1 analogue: decode the submission of a serve step (``compile``).
+2. §6.2 analogue: inline vs direct data movement (``transfer``).
+3. §6.3 analogue: the command-footprint law (``graph_launch``/``dispatch``).
+4. The merged timeline: all of the above interleaved in submission order.
 
     PYTHONPATH=src python examples/command_stream_tour.py
 """
@@ -14,12 +19,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.configs import SMOKE_ARCHS
-from repro.core import (CommandStreamCapture, ExecGraph, HybridMover,
-                        render_submission)
+from repro.core import ExecGraph, TraceSession, render_submission
 from repro.models import get_model
 
 
-def tour_1_listing() -> None:
+def tour_1_listing(sess: TraceSession) -> None:
     print("=" * 72)
     print("1. Command-stream reconstruction (Listing 1 analogue)")
     print("=" * 72)
@@ -29,44 +33,52 @@ def tour_1_listing() -> None:
     params = model.init_params(jax.random.PRNGKey(0))
     state = model.init_decode_state(2, 32)
     tok = np.zeros((2, 1), np.int32)
-    cap = CommandStreamCapture()
-    cs = cap.lower_and_compile("serve_step", model.decode_step,
-                               args=(params, state, tok))
+    cs = sess.capture.lower_and_compile("serve_step", model.decode_step,
+                                        args=(params, state, tok))
     print(render_submission(cs, max_entries=18))
 
 
-def tour_2_dma() -> None:
+def tour_2_dma(sess: TraceSession) -> None:
     print("\n" + "=" * 72)
     print("2. Data-movement protocols (inline vs direct, §6.2)")
     print("=" * 72)
-    mover = HybridMover(threshold=24 * 1024)    # the paper's switch point
+    sess.mover.threshold = 24 * 1024            # the paper's switch point
     for nbytes in (64, 4096, 16 * 1024, 64 * 1024, 1 << 20):
         x = np.random.default_rng(0).integers(
             0, 255, size=nbytes).astype(np.uint8)
-        _, rec = mover.put(x)
+        _, rec = sess.mover.put(x)
         print(f"  {nbytes:>9d} B -> {rec.mode:7s} "
               f"complete={rec.complete_s*1e6:8.1f} us "
               f"bw={rec.bandwidth_gib_s:8.3f} GiB/s")
-    print("  protocol counts:", mover.stats(),
+    print("  protocol counts:", sess.mover.stats(),
           "(threshold is a knob — CUDA's is opaque)")
 
 
-def tour_3_graphs() -> None:
+def tour_3_graphs(sess: TraceSession) -> None:
     print("\n" + "=" * 72)
     print("3. Launch modes & the command-footprint law (§6.3)")
     print("=" * 72)
     for K in (10, 100):
         for mode in ("per_op", "graphed", "multistep"):
             g = ExecGraph(chain_len=K, width=1024)
-            g.launch(mode)                       # warm
-            _, st = g.launch(mode)
+            g.launch(mode, session=sess)         # warm
+            _, st = g.launch(mode, session=sess)
             print(f"  K={K:4d} {mode:10s} doorbells={st.doorbells:4d} "
                   f"footprint={st.command_bytes:8d}B "
                   f"launch={st.launch_s*1e6:8.1f}us")
     print("  -> footprint and doorbells, not node count, set launch cost")
 
 
+def tour_4_timeline(sess: TraceSession) -> None:
+    print("\n" + "=" * 72)
+    print("4. The unified timeline (one watchpoint saw all of the above)")
+    print("=" * 72)
+    print(sess.report(max_events=24))
+
+
 if __name__ == "__main__":
-    tour_1_listing()
-    tour_2_dma()
-    tour_3_graphs()
+    with TraceSession("command_stream_tour") as sess:
+        tour_1_listing(sess)
+        tour_2_dma(sess)
+        tour_3_graphs(sess)
+    tour_4_timeline(sess)

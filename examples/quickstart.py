@@ -1,8 +1,10 @@
-"""Quickstart: capture and decode the command stream of a train step.
+"""Quickstart: one TraceSession from capture to report.
 
-Runs a reduced deepseek-7b config for a few steps, then prints the
-Listing-1-style decoded submission report — the paper's contribution in
-three lines of user code.
+Runs a reduced deepseek-7b config for a few steps with ALL instrumentation
+flowing through a single :class:`repro.core.TraceSession` — compile events
+from the capture boundary, dispatch events from the doorbell-wrapped train
+step, and progress fences — then prints the Listing-1-style decoded
+submission report plus the unified, submission-ordered event timeline.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,7 +15,7 @@ import jax
 
 from repro.configs import SMOKE_ARCHS
 from repro.configs.shapes import ShapeConfig
-from repro.core import CommandStreamCapture, analyze, render_submission
+from repro.core import TraceSession, analyze, render_submission
 from repro.models import get_model
 from repro.runtime.steps import init_all, make_train_step
 from repro.runtime.trainer import Trainer
@@ -23,30 +25,35 @@ def main() -> None:
     cfg = SMOKE_ARCHS["deepseek-7b"]
     shape = ShapeConfig("quickstart", seq_len=64, global_batch=4, kind="train")
 
-    # --- 1. capture the command stream at the submission boundary --------
-    model = get_model(cfg)
-    params, opt = init_all(model, cfg)
-    from repro.data.pipeline import SyntheticTokens
-    batch = SyntheticTokens(cfg, shape).batch_at(0)
-    cap = CommandStreamCapture()
-    cs = cap.lower_and_compile("train_step", make_train_step(model, cfg),
-                               args=(params, opt, batch))
-    print(render_submission(cs, max_entries=25))
+    with TraceSession("quickstart") as sess:
+        # --- 1. capture the command stream at the submission boundary ----
+        model = get_model(cfg)
+        params, opt = init_all(model, cfg)
+        from repro.data.pipeline import SyntheticTokens
+        batch = SyntheticTokens(cfg, shape).batch_at(0)
+        cs = sess.capture.lower_and_compile(
+            "train_step", make_train_step(model, cfg),
+            args=(params, opt, batch))
+        print(render_submission(cs, max_entries=25))
 
-    # --- 2. three-term roofline from the captured stream ------------------
-    rep = analyze(cs, chips=1, model_flops_total=6 * 115008 * 4 * 64)
-    print(f"\nroofline: compute={rep.compute_s*1e6:.1f}us "
-          f"memory={rep.memory_s*1e6:.1f}us "
-          f"collective={rep.collective_s*1e6:.1f}us "
-          f"-> {rep.bottleneck}-bound")
+        # --- 2. three-term roofline from the captured stream --------------
+        rep = analyze(cs, chips=1, model_flops_total=6 * 115008 * 4 * 64)
+        print(f"\nroofline: compute={rep.compute_s*1e6:.1f}us "
+              f"memory={rep.memory_s*1e6:.1f}us "
+              f"collective={rep.collective_s*1e6:.1f}us "
+              f"-> {rep.bottleneck}-bound")
 
-    # --- 3. train a few steps with submission accounting -------------------
-    tr = Trainer(cfg, shape, steps_per_launch=2)
-    out = tr.train(4)
-    print(f"\ntrained {out['steps']} steps in {out['wall_s']:.1f}s, "
-          f"{out['doorbells']} doorbells "
-          f"({out['steps_per_doorbell']:.0f} steps/doorbell), "
-          f"final loss {out['final_loss']:.3f}")
+        # --- 3. train a few steps on the SAME session ----------------------
+        tr = Trainer(cfg, shape, steps_per_launch=2, session=sess)
+        out = tr.train(4)
+        print(f"\ntrained {out['steps']} steps in {out['wall_s']:.1f}s, "
+              f"{out['doorbells']} doorbells "
+              f"({out['steps_per_doorbell']:.0f} steps/doorbell), "
+              f"final loss {out['final_loss']:.3f}")
+
+    # --- 4. the unified timeline: compile, dispatch, progress interleaved --
+    print()
+    print(sess.report(max_events=20))
 
 
 if __name__ == "__main__":

@@ -4,6 +4,7 @@ Command-stream visibility for the JAX/XLA/TPU stack, adapted from
 "Revealing NVIDIA Closed-Source Driver Command Streams for CPU-GPU Runtime
 Behavior Insight":
 
+* :mod:`repro.core.session`   — unified TraceSession: one event timeline
 * :mod:`repro.core.capture`   — capture at the submission boundary
 * :mod:`repro.core.hlo`       — command-stream reconstruction/decoding
 * :mod:`repro.core.doorbell`  — submission-cycle (dispatch) tracking
@@ -13,6 +14,8 @@ Behavior Insight":
 * :mod:`repro.core.roofline`  — 3-term roofline from captured streams
 * :mod:`repro.core.report`    — Listing-1-style decoded reports
 """
+from .session import (EVENT_KINDS, JsonlSink, RingBufferSink, TraceEvent,
+                      TraceSession, current_session)
 from .capture import CapturedStream, CommandStreamCapture, capture_fn
 from .dma import (HybridMover, INLINE_THRESHOLD_DEFAULT, TransferRecord,
                   direct_put, inline_put, sweep_transfer)
@@ -25,6 +28,8 @@ from .roofline import (HW, TPU_V5E, RooflineReport, adjusted, analyze,
 from .semaphore import Heartbeat, ProgressTracker, SemaphoreToken
 
 __all__ = [
+    "EVENT_KINDS", "JsonlSink", "RingBufferSink", "TraceEvent",
+    "TraceSession", "current_session",
     "CapturedStream", "CommandStreamCapture", "capture_fn",
     "HybridMover", "INLINE_THRESHOLD_DEFAULT", "TransferRecord",
     "direct_put", "inline_put", "sweep_transfer",

@@ -18,6 +18,7 @@ from typing import Any, Callable, Dict, Optional, Sequence
 import jax
 
 from . import hlo
+from .session import TraceSession, resolve_session
 
 __all__ = ["CapturedStream", "CommandStreamCapture", "capture_fn"]
 
@@ -116,8 +117,18 @@ class CommandStreamCapture:
         cs.stream.collective_link_bytes   # decoded ICI traffic
     """
 
-    def __init__(self) -> None:
+    def __init__(self, session: Optional[TraceSession] = None) -> None:
         self.captured: Dict[str, CapturedStream] = {}
+        self._session = session
+
+    def _emit(self, cs: CapturedStream, t: float) -> None:
+        """Publish one ``compile`` event for a captured submission unit."""
+        sess = resolve_session(self._session)
+        if sess is not None:
+            sess.emit("compile", cs.name,
+                      dur_s=cs.lower_time_s + cs.compile_time_s, t=t,
+                      command_bytes=cs.command_bytes, n_ops=cs.n_ops,
+                      flops=cs.flops, memory_bytes=cs.memory_bytes)
 
     def lower_and_compile(
         self,
@@ -160,6 +171,7 @@ class CommandStreamCapture:
             compiled=compiled, stream=stream, cost=cost, memory=memory,
             lower_time_s=t1 - t0, compile_time_s=t2 - t1)
         self.captured[name] = cs
+        self._emit(cs, t=t0)
         return cs
 
     def capture_compiled(self, name: str, compiled: Any) -> CapturedStream:
@@ -171,6 +183,7 @@ class CommandStreamCapture:
             cost=_normalize_cost(getattr(compiled, "cost_analysis", lambda: {})()),
             memory=_memory_analysis_dict(compiled))
         self.captured[name] = cs
+        self._emit(cs, t=time.perf_counter())
         return cs
 
 

@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .session import TraceSession, resolve_session
+
 __all__ = [
     "INLINE_THRESHOLD_DEFAULT",
     "TransferRecord",
@@ -83,8 +85,20 @@ def _fingerprint(x: np.ndarray) -> Tuple:
     return (x.shape, str(x.dtype), hash(x.tobytes()))
 
 
+def _emit_transfer(session: Optional[TraceSession], rec: TransferRecord,
+                   t: float) -> None:
+    sess = resolve_session(session)
+    if sess is not None:
+        sess.emit("transfer", f"{rec.mode}_put", dur_s=rec.submit_s,
+                  complete_s=rec.complete_s, payload_bytes=rec.nbytes, t=t,
+                  mode=rec.mode, build_s=rec.build_s,
+                  bandwidth_gib_s=rec.bandwidth_gib_s)
+
+
 def inline_put(x: np.ndarray, device: Optional[Any] = None,
-               _cache: bool = True) -> Tuple[jax.Array, TransferRecord]:
+               _cache: bool = True,
+               session: Optional[TraceSession] = None,
+               ) -> Tuple[jax.Array, TransferRecord]:
     """Move ``x`` to device via the *inline* protocol.
 
     The payload is baked into an executable as a constant; dispatching the
@@ -117,10 +131,12 @@ def inline_put(x: np.ndarray, device: Optional[Any] = None,
         mode="inline", nbytes=x.nbytes, build_s=build_s,
         submit_s=t2 - t1, complete_s=t3 - t1,
         bandwidth_gib_s=x.nbytes / max(t3 - t1, 1e-12) / 2**30)
+    _emit_transfer(session, rec, t=t1)
     return out, rec
 
 
-def direct_put(x: np.ndarray, device: Optional[Any] = None
+def direct_put(x: np.ndarray, device: Optional[Any] = None,
+               session: Optional[TraceSession] = None,
                ) -> Tuple[jax.Array, TransferRecord]:
     """Move ``x`` to device via the *direct* protocol (explicit transfer)."""
     x = np.asarray(x)
@@ -133,6 +149,7 @@ def direct_put(x: np.ndarray, device: Optional[Any] = None
         mode="direct", nbytes=x.nbytes, build_s=0.0,
         submit_s=t2 - t1, complete_s=t3 - t1,
         bandwidth_gib_s=x.nbytes / max(t3 - t1, 1e-12) / 2**30)
+    _emit_transfer(session, rec, t=t1)
     return out, rec
 
 
@@ -146,17 +163,19 @@ class HybridMover:
     """
 
     def __init__(self, threshold: int = INLINE_THRESHOLD_DEFAULT,
-                 device: Optional[Any] = None) -> None:
+                 device: Optional[Any] = None,
+                 session: Optional[TraceSession] = None) -> None:
         self.threshold = int(threshold)
         self.device = device
         self.records: List[TransferRecord] = []
+        self._session = session
 
     def put(self, x: np.ndarray) -> Tuple[jax.Array, TransferRecord]:
         x = np.asarray(x)
         if x.nbytes < self.threshold:
-            out, rec = inline_put(x, self.device)
+            out, rec = inline_put(x, self.device, session=self._session)
         else:
-            out, rec = direct_put(x, self.device)
+            out, rec = direct_put(x, self.device, session=self._session)
         self.records.append(rec)
         return out, rec
 

@@ -11,14 +11,21 @@ the wall time to enqueue (dispatch, async) and optionally to complete, and the
 argument payload bytes.  This is the measurement substrate for the CUDA-Graph
 case study (dispatch counts ≙ doorbell writes) and for the Trainer's
 submission accounting.
+
+Every recorded cycle is also published as a ``dispatch`` event on the bound
+or ambient :class:`~repro.core.session.TraceSession` (see that module);
+standalone use without a session is unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
+
+from .session import TraceSession, resolve_session
 
 __all__ = ["DoorbellRecord", "DoorbellTracker", "payload_bytes"]
 
@@ -51,9 +58,10 @@ class DoorbellRecord:
 class DoorbellTracker:
     """Counts and times submission cycles ("doorbell writes")."""
 
-    def __init__(self) -> None:
+    def __init__(self, session: Optional[TraceSession] = None) -> None:
         self.records: List[DoorbellRecord] = []
         self._seq = 0
+        self._session = session
 
     # -- wrapping ----------------------------------------------------------
     def wrap(self, fn: Callable, name: str = "dispatch",
@@ -65,6 +73,7 @@ class DoorbellTracker:
         the analogue of the doorbell write returning immediately while the
         GPU consumes the GPFIFO.
         """
+        @functools.wraps(fn)
         def wrapped(*args, **kwargs):
             t0 = time.perf_counter()
             out = fn(*args, **kwargs)
@@ -89,6 +98,10 @@ class DoorbellTracker:
             seq=self._seq, name=name, t_submit=t0, dispatch_s=disp,
             complete_s=comp, payload_bytes=payload))
         self._seq += 1
+        sess = resolve_session(self._session)
+        if sess is not None:
+            sess.emit("dispatch", name, dur_s=disp, complete_s=comp,
+                      payload_bytes=payload, t=t0)
 
     # -- accounting --------------------------------------------------------
     @property

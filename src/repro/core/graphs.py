@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from . import hlo
 from .doorbell import DoorbellTracker
+from .session import TraceSession, resolve_session
 
 __all__ = ["LaunchStats", "ExecGraph", "MultiStepLauncher", "LAUNCH_MODES"]
 
@@ -131,11 +132,12 @@ class ExecGraph:
         return stream.text_bytes, stream.n_ops
 
     # -- launch (≙ cudaGraphLaunch) ------------------------------------------
-    def launch(self, mode: str, tracker: Optional[DoorbellTracker] = None
+    def launch(self, mode: str, tracker: Optional[DoorbellTracker] = None,
+               session: Optional[TraceSession] = None
                ) -> Tuple[jax.Array, LaunchStats]:
         if mode not in self._compiled:
             self.upload(mode)
-        tracker = tracker or DoorbellTracker()
+        tracker = tracker or DoorbellTracker(session=session)
         compiled = self._compiled[mode]
         x = self._x0()
         jax.block_until_ready(x)
@@ -166,6 +168,12 @@ class ExecGraph:
             command_bytes=cmd_bytes, n_ops=n_ops,
             launch_s=t1 - t0, complete_s=t2 - t0,
             upload_s=self._upload_s.get(mode, 0.0))
+        sess = resolve_session(session)
+        if sess is not None:
+            sess.emit("graph_launch", f"{mode}_launch", dur_s=stats.launch_s,
+                      complete_s=stats.complete_s, t=t0, mode=mode,
+                      chain_len=stats.chain_len, doorbells=stats.doorbells,
+                      command_bytes=stats.command_bytes, n_ops=stats.n_ops)
         return y, stats
 
     def reference(self) -> jax.Array:
@@ -186,11 +194,13 @@ class MultiStepLauncher:
     """
 
     def __init__(self, step_fn: Callable, k: int,
-                 donate_carry: bool = True) -> None:
+                 donate_carry: bool = True,
+                 session: Optional[TraceSession] = None) -> None:
         self.k = int(k)
         self.step_fn = step_fn
         self._jitted = None
-        self.tracker = DoorbellTracker()
+        self._session = session
+        self.tracker = DoorbellTracker(session=session)
 
         def k_steps(carry, batches):
             def body(c, b):
@@ -206,8 +216,12 @@ class MultiStepLauncher:
         """``batches`` must be stacked along a leading K axis."""
         t0 = time.perf_counter()
         out = self._jitted(carry, batches)
+        t1 = time.perf_counter()
         self.tracker.ring("multistep_launch")
-        del t0
+        sess = resolve_session(self._session)
+        if sess is not None:
+            sess.emit("graph_launch", "multistep_launch", dur_s=t1 - t0,
+                      t=t0, mode="multistep", chain_len=self.k, doorbells=1)
         return out
 
     def lower(self, carry_spec: Any, batches_spec: Any):

@@ -23,6 +23,8 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from .session import TraceSession, resolve_session
+
 __all__ = ["SemaphoreToken", "ProgressTracker", "Heartbeat"]
 
 
@@ -43,9 +45,10 @@ class SemaphoreToken:
 class ProgressTracker:
     """Semaphore-release/wait protocol over JAX buffers."""
 
-    def __init__(self) -> None:
+    def __init__(self, session: Optional[TraceSession] = None) -> None:
         self._next_payload = 1
         self.tokens: List[SemaphoreToken] = []
+        self._session = session
 
     def release(self, tied_to: Any) -> SemaphoreToken:
         """Append a release after ``tied_to`` (any pytree of device arrays).
@@ -67,6 +70,9 @@ class ProgressTracker:
         tok = SemaphoreToken(payload=payload, fence=fence,
                              t_release=time.perf_counter())
         self.tokens.append(tok)
+        sess = resolve_session(self._session)
+        if sess is not None:
+            sess.emit("progress", "release", t=tok.t_release, payload=payload)
         return tok
 
     def wait(self, token: SemaphoreToken) -> float:
@@ -77,6 +83,11 @@ class ProgressTracker:
                 f"semaphore payload mismatch: expected {token.payload}, "
                 f"observed {val}")
         token.t_complete = time.perf_counter()
+        sess = resolve_session(self._session)
+        if sess is not None:
+            sess.emit("progress", "wait", t=token.t_complete,
+                      complete_s=token.t_complete - token.t_release,
+                      payload=token.payload)
         return token.t_complete
 
     def elapsed(self, a: SemaphoreToken, b: SemaphoreToken) -> float:

@@ -1,0 +1,373 @@
+"""Unified trace session: one submission-event timeline for the whole stack.
+
+The paper's methodological core is a *single, complete* observation point —
+the doorbell watchpoint — through which every submission passes exactly once.
+Our reproduction previously scattered that visibility across five disjoint
+primitives (capture, doorbell, DMA, graph launch, progress) that consumers
+wired by hand with no shared clock or event model.  :class:`TraceSession` is
+the watchpoint analogue for the JAX stack: every instrumented code path —
+compile, dispatch, transfer, graph launch, progress fence — reports into one
+session, under one monotonic sequence number and one timestamp base, so the
+merged timeline interleaves events in true submission order.
+
+Activation follows the watchpoint model too: installing a session makes it
+ambient.  ``with TraceSession(...) as sess:`` publishes the session through a
+:mod:`contextvars` variable; any tracker, mover, launcher, or capture created
+*without* an explicit session reports to the ambient one while the block is
+active (and stays silent outside it — legacy standalone behaviour is
+unchanged).  Explicit injection (``DoorbellTracker(session=sess)``) is still
+supported and wins over the ambient session.
+
+Events flow to pluggable sinks.  Two are built in:
+
+* :class:`RingBufferSink` — bounded in-memory ring (always installed; backs
+  :meth:`TraceSession.timeline`);
+* :class:`JsonlSink` — append-only JSONL file for offline analysis.
+
+:meth:`TraceSession.report` renders the Listing-1-style interleaved timeline;
+:meth:`TraceSession.summary` gives JSON-serializable per-kind accounting.
+"""
+from __future__ import annotations
+
+import collections
+import contextvars
+import dataclasses
+import json
+import threading
+import time
+from typing import Any, Callable, Dict, IO, Iterable, Iterator, List, Optional
+
+__all__ = [
+    "EVENT_KINDS",
+    "TraceEvent",
+    "RingBufferSink",
+    "JsonlSink",
+    "TraceSession",
+    "current_session",
+]
+
+#: The five submission-event kinds, mirroring the subsystems they unify:
+#: ``compile`` (capture.py), ``dispatch`` (doorbell.py), ``transfer``
+#: (dma.py), ``graph_launch`` (graphs.py), ``progress`` (semaphore.py).
+EVENT_KINDS = ("compile", "dispatch", "transfer", "graph_launch", "progress")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One submission event on the unified timeline.
+
+    ``seq`` is unique and monotonic *across all kinds* within a session —
+    the analogue of observing every doorbell write from one watchpoint.
+    ``t`` is seconds since the session's timestamp base (``perf_counter``
+    at session construction), so events from different subsystems are
+    directly comparable.
+    """
+
+    seq: int
+    kind: str                   # one of EVENT_KINDS
+    name: str                   # subsystem-chosen label (e.g. "train_step")
+    t: float                    # seconds since session t0
+    dur_s: float = 0.0          # host time to submit/enqueue
+    complete_s: float = 0.0     # host time to completion (0 if not fenced)
+    payload_bytes: int = 0      # bytes riding this submission
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "seq": self.seq, "kind": self.kind, "name": self.name,
+            "t": self.t, "dur_s": self.dur_s, "complete_s": self.complete_s,
+            "payload_bytes": self.payload_bytes, "meta": self.meta,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "TraceEvent":
+        return cls(seq=int(d["seq"]), kind=d["kind"], name=d["name"],
+                   t=float(d["t"]), dur_s=float(d.get("dur_s", 0.0)),
+                   complete_s=float(d.get("complete_s", 0.0)),
+                   payload_bytes=int(d.get("payload_bytes", 0)),
+                   meta=dict(d.get("meta", {})))
+
+    def describe(self) -> str:
+        """One fixed-width timeline line (Listing-1 style)."""
+        extra = ""
+        if self.payload_bytes:
+            extra += f" payload={self.payload_bytes}B"
+        if self.complete_s:
+            extra += f" complete={self.complete_s*1e6:.1f}us"
+        for k in ("mode", "chain_len", "doorbells", "command_bytes",
+                  "payload"):
+            if k in self.meta:
+                extra += f" {k}={self.meta[k]}"
+        return (f"{self.seq:>6d}  {self.t*1e3:>10.3f}ms  {self.kind:<12s} "
+                f"{self.name:<28s} dur={self.dur_s*1e6:>9.1f}us{extra}")
+
+
+class RingBufferSink:
+    """Bounded in-memory event store (drops oldest beyond ``maxlen``)."""
+
+    def __init__(self, maxlen: int = 4096) -> None:
+        self.maxlen = int(maxlen)
+        self._buf: collections.deque = collections.deque(maxlen=self.maxlen)
+        self.n_emitted = 0          # total ever seen, incl. dropped
+
+    def emit(self, event: TraceEvent) -> None:
+        self._buf.append(event)
+        self.n_emitted += 1
+
+    @property
+    def dropped(self) -> int:
+        return self.n_emitted - len(self._buf)
+
+    def events(self) -> List[TraceEvent]:
+        return list(self._buf)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def __iter__(self) -> Iterator[TraceEvent]:
+        return iter(list(self._buf))
+
+    def close(self) -> None:  # sink protocol
+        pass
+
+
+class JsonlSink:
+    """Append-only JSONL file sink; one event per line.
+
+    The file is opened lazily on first emit so constructing a session with a
+    ``jsonl_path`` is free until something is actually traced.
+    """
+
+    def __init__(self, path: str) -> None:
+        self.path = str(path)
+        self._fh: Optional[IO[str]] = None
+
+    def emit(self, event: TraceEvent) -> None:
+        if self._fh is None:
+            self._fh = open(self.path, "a")
+        self._fh.write(json.dumps(event.to_dict()) + "\n")
+
+    def flush(self) -> None:
+        if self._fh is not None:
+            self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.flush()
+            self._fh.close()
+            self._fh = None
+
+    @staticmethod
+    def load(path: str) -> List[TraceEvent]:
+        """Read a JSONL trace back into events (round-trip helper)."""
+        out: List[TraceEvent] = []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    out.append(TraceEvent.from_dict(json.loads(line)))
+        return out
+
+
+_current: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_trace_session", default=None)
+
+
+def current_session() -> Optional["TraceSession"]:
+    """The ambient session installed by ``with TraceSession(...)`` (or None)."""
+    return _current.get()
+
+
+class TraceSession:
+    """The single entry point for all command-stream instrumentation.
+
+    Usage (ambient activation — instrumented paths report implicitly)::
+
+        with TraceSession("train", jsonl_path="trace.jsonl") as sess:
+            cs = sess.capture.lower_and_compile("step", step_fn, args=(...,))
+            step = sess.wrap(compiled, "train_step")
+            step(params, batch)                     # -> dispatch event
+            sess.mover.put(np.zeros(1 << 20))       # -> transfer event
+        print(sess.report())
+
+    Or explicit injection, no context manager required::
+
+        sess = TraceSession("bench")
+        tracker = DoorbellTracker(session=sess)
+
+    The session owns the shared clock (``t0``) and the monotonic sequence
+    counter; :meth:`emit` is thread-safe so async checkpoint/data threads can
+    report concurrently.
+    """
+
+    def __init__(self, name: str = "session",
+                 sinks: Optional[Iterable[Any]] = None,
+                 ring_size: int = 4096,
+                 jsonl_path: Optional[str] = None) -> None:
+        self.name = name
+        self.t0 = time.perf_counter()
+        self._seq = 0
+        self._lock = threading.Lock()
+        # Accounting accumulated at emit time, NOT derived from the ring —
+        # summary() stays exact even after the bounded ring drops events.
+        self._by_kind: Dict[str, int] = {}
+        self._by_name: Dict[str, Dict[str, Any]] = {}
+        self._total_payload = 0
+        self._dispatch_s = 0.0
+        self.ring = RingBufferSink(ring_size)
+        self.sinks: List[Any] = [self.ring]
+        if jsonl_path is not None:
+            self.sinks.append(JsonlSink(jsonl_path))
+        if sinks:
+            self.sinks.extend(sinks)
+        self._tokens: List[contextvars.Token] = []
+
+        # Bound subsystem facades — one session drives everything.  Imported
+        # lazily to avoid an import cycle (those modules import this one).
+        from .capture import CommandStreamCapture
+        from .dma import HybridMover
+        from .doorbell import DoorbellTracker
+        from .semaphore import ProgressTracker
+        self.capture = CommandStreamCapture(session=self)
+        self.doorbell = DoorbellTracker(session=self)
+        self.mover = HybridMover(session=self)
+        self.progress = ProgressTracker(session=self)
+
+    # -- activation --------------------------------------------------------
+    def __enter__(self) -> "TraceSession":
+        self._tokens.append(_current.set(self))
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        _current.reset(self._tokens.pop())
+        if not self._tokens:            # outermost exit: flush file sinks
+            self.close()
+
+    def close(self) -> None:
+        for s in self.sinks:
+            close = getattr(s, "close", None)
+            if close is not None:
+                close()
+
+    # -- emission ----------------------------------------------------------
+    def emit(self, kind: str, name: str,
+             dur_s: float = 0.0, complete_s: float = 0.0,
+             payload_bytes: int = 0, t: Optional[float] = None,
+             **meta: Any) -> TraceEvent:
+        """Record one event; returns it with its assigned sequence number.
+
+        ``t`` is an absolute ``perf_counter`` reading (defaults to now) and
+        is rebased onto the session clock.
+        """
+        if kind not in EVENT_KINDS:
+            raise ValueError(f"unknown event kind {kind!r}; "
+                             f"expected one of {EVENT_KINDS}")
+        t_abs = time.perf_counter() if t is None else t
+        # The whole emit is one critical section: sequence assignment,
+        # accounting, and sink fan-out (lazy file opens, ring pushes) must
+        # not interleave across threads.
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+            ev = TraceEvent(seq=seq, kind=kind, name=name,
+                            t=t_abs - self.t0, dur_s=dur_s,
+                            complete_s=complete_s,
+                            payload_bytes=payload_bytes, meta=meta)
+            self._by_kind[kind] = self._by_kind.get(kind, 0) + 1
+            d = self._by_name.setdefault(name, {"events": 0, "dur_s": 0.0,
+                                                "payload_bytes": 0})
+            d["events"] += 1
+            d["dur_s"] += dur_s
+            d["payload_bytes"] += payload_bytes
+            self._total_payload += payload_bytes
+            if kind == "dispatch":
+                self._dispatch_s += dur_s
+            for s in self.sinks:
+                s.emit(ev)
+        return ev
+
+    # -- convenience wrappers (delegate to bound facades) ------------------
+    def wrap(self, fn: Callable, name: str = "dispatch",
+             block: bool = False) -> Callable:
+        """Doorbell-wrap a callable; each call lands a ``dispatch`` event."""
+        return self.doorbell.wrap(fn, name=name, block=block)
+
+    def lower_and_compile(self, name: str, fn: Callable, **kw: Any):
+        """Capture a lower/compile through the bound capture facade."""
+        return self.capture.lower_and_compile(name, fn, **kw)
+
+    def put(self, x: Any):
+        """Move data through the bound :class:`HybridMover`."""
+        return self.mover.put(x)
+
+    # -- querying ----------------------------------------------------------
+    @property
+    def n_events(self) -> int:
+        return self.ring.n_emitted
+
+    def timeline(self, kinds: Optional[Iterable[str]] = None,
+                 name: Optional[str] = None) -> List[TraceEvent]:
+        """Events in submission order (monotonic ``seq``), optionally
+        filtered by kind(s) and/or name."""
+        evs = self.ring.events()
+        if kinds is not None:
+            ks = {kinds} if isinstance(kinds, str) else set(kinds)
+            evs = [e for e in evs if e.kind in ks]
+        if name is not None:
+            evs = [e for e in evs if e.name == name]
+        return sorted(evs, key=lambda e: e.seq)
+
+    def summary(self) -> Dict[str, Any]:
+        """JSON-serializable per-kind/per-name accounting.
+
+        Counts come from emit-time accumulators (exact over the whole run);
+        only ``timeline()`` is bounded by the ring.  ``total_dispatch_s``
+        sums host dispatch time over ``dispatch`` events only — compile and
+        transfer durations live under their names in ``by_name``.
+        """
+        with self._lock:
+            by_kind = dict(self._by_kind)
+            by_name = {k: dict(v) for k, v in self._by_name.items()}
+            payload = self._total_payload
+            dispatch_s = self._dispatch_s
+        return {
+            "session": self.name,
+            "events": self.ring.n_emitted,
+            "dropped": self.ring.dropped,
+            "by_kind": by_kind,
+            "by_name": by_name,
+            "total_payload_bytes": payload,
+            "total_dispatch_s": dispatch_s,
+            "wall_s": time.perf_counter() - self.t0,
+        }
+
+    def report(self, max_events: int = 60,
+               kinds: Optional[Iterable[str]] = None) -> str:
+        """Listing-1-style interleaved timeline: every subsystem's events in
+        one submission-ordered view."""
+        evs = self.timeline(kinds=kinds)
+        s = self.summary()
+        lines = [f"==== TRACE SESSION {self.name} ===="]
+        lines.append("  ".join(f"{k}={v}" for k, v in s["by_kind"].items())
+                     or "  (no events)")
+        lines.append(f"events={s['events']} dropped={s['dropped']} "
+                     f"payload={s['total_payload_bytes']}B "
+                     f"wall={s['wall_s']:.3f}s")
+        lines.append(f"{'seq':>6s}  {'t':>12s}  {'kind':<12s} "
+                     f"{'name':<28s} host-cost")
+        for e in evs[:max_events]:
+            lines.append(e.describe())
+        if len(evs) > max_events:
+            lines.append(f"  ... {len(evs) - max_events} more")
+        lines.append(f"==== END TRACE SESSION {self.name} ====")
+        return "\n".join(lines)
+
+
+def resolve_session(explicit: Optional[TraceSession]) -> Optional[TraceSession]:
+    """Explicit injection wins; otherwise fall back to the ambient session.
+
+    Instrumented primitives call this *at emission time* so a tracker built
+    before ``with TraceSession(...)`` still reports while the block is
+    active — the watchpoint sees everything, whenever it was armed.
+    """
+    return explicit if explicit is not None else current_session()

@@ -3,15 +3,37 @@
 Model code (e.g. the shard_map MoE) needs the active mesh + data-parallel
 axis names; launchers set them here.  Kept explicit (not jax's global mesh)
 so models stay traceable without a mesh for single-device tests.
+
+Also hosts :func:`shard_map` — a version-compat wrapper over
+``jax.shard_map`` (jax ≥ 0.5, ``check_vma=``) and
+``jax.experimental.shard_map.shard_map`` (older jax, ``check_rep=``).
 """
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
+import jax
+
 _MESH = None
 _DP_AXES: Tuple[str, ...] = ()
 
-__all__ = ["set_mesh", "get_mesh", "dp_axes_active"]
+__all__ = ["set_mesh", "get_mesh", "dp_axes_active", "shard_map"]
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        # mid-range jax promoted shard_map to the top level before renaming
+        # check_rep= to check_vma= — probe both spellings
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        except TypeError:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+    from jax.experimental.shard_map import shard_map as legacy_sm
+    return legacy_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_vma)
 
 
 def set_mesh(mesh, dp_axes: Tuple[str, ...]) -> None:

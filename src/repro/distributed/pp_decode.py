@@ -35,6 +35,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..configs.base import ModelConfig
 from ..models.layers import apply_rope, rms_norm, rotary
+from .context import shard_map
 
 __all__ = ["PPDecoder"]
 
@@ -303,7 +304,7 @@ class PPDecoder:
         wire_spec = P(sa, None, None, None)
 
         def step(params, state, tokens):
-            kv_k, kv_v, wire, logits = jax.shard_map(
+            kv_k, kv_v, wire, logits = shard_map(
                 stage_fn, mesh=self.mesh,
                 in_specs=(p_specs, kv_spec, kv_spec, wire_spec, P(),
                           P(None, None)),

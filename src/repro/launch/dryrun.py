@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import ARCHS, SHAPES, resolve, skip_reason
-from ..core import CommandStreamCapture, analyze, attribute, model_flops
+from ..core import TraceSession, analyze, attribute, model_flops
 from ..distributed.sharding import ShardingRules
 from ..models import get_model
 from ..runtime.steps import (init_all, make_decode_step, make_input_specs,
@@ -78,7 +78,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         dp = dp_axes(mesh)
         sp = NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0], "model", None))
         model.constraint = lambda x: jax.lax.with_sharding_constraint(x, sp)
-    cap = CommandStreamCapture()
+    sess = TraceSession(name=f"{arch}:{shape_name}")
+    cap = sess.capture
     t0 = time.time()
 
     with mesh:
@@ -177,6 +178,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "attribution": attr,
         "model_params_total": n_total,
         "model_params_active": n_active,
+        "trace": sess.summary(),
     })
     if keep_artifacts:
         rec["_captured"] = cs
@@ -200,7 +202,8 @@ def run_pp_cell(arch: str, shape_name: str, multi_pod: bool,
     if overrides:
         cfg = _dc.replace(cfg, **overrides)
     pp = PPDecoder(cfg, mesh, tokens_per_launch=tokens_per_launch)
-    cap = CommandStreamCapture()
+    sess = TraceSession(name=f"{arch}:{shape_name}:pp")
+    cap = sess.capture
     t0 = time.time()
     with mesh:
         params_s = jax.eval_shape(
@@ -233,7 +236,8 @@ def run_pp_cell(arch: str, shape_name: str, multi_pod: bool,
            "cost_bytes": cs.xla_bytes, "dropped_shardings": [],
            "attribution": {}, "model_params_total": n_total,
            "model_params_active": n_active, "pp": True,
-           "tokens_per_launch": tokens_per_launch}
+           "tokens_per_launch": tokens_per_launch,
+           "trace": sess.summary()}
     if keep_artifacts:
         rec["_captured"] = cs
     return rec

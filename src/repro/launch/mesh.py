@@ -17,20 +17,27 @@ SINGLE_POD = (16, 16)
 MULTI_POD = (2, 16, 16)
 
 
+def _make(shape, axes):
+    # jax < 0.5 has neither sharding.AxisType nor make_mesh(axis_types=...);
+    # Auto is that older default, so plain make_mesh is equivalent there.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
 
 
 def make_mesh(data: int, model: int, pod: int = 1):
     """Arbitrary (pod ×) data × model mesh for tests/examples."""
     if pod > 1:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return _make((pod, data, model), ("pod", "data", "model"))
+    return _make((data, model), ("data", "model"))

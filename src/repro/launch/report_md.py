@@ -69,6 +69,29 @@ def collective_table(recs, mesh="multi"):
     return "\n".join(rows)
 
 
+def trace_table(recs, mesh="single"):
+    """Unified-session event accounting per cell (from TraceSession.summary)."""
+    rows = ["| arch | shape | events | compile | dispatch | transfer "
+            "| graph_launch | progress | host dispatch (ms) |",
+            "|---|---|---:|---:|---:|---:|---:|---:|---:|"]
+    latest = OrderedDict()
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        if "trace" in r:
+            latest[(r["arch"], r["shape"])] = r
+    for (arch, shape), r in latest.items():
+        t = r["trace"]
+        k = t.get("by_kind", {})
+        rows.append(
+            f"| {arch} | {shape} | {t.get('events', 0)} "
+            f"| {k.get('compile', 0)} | {k.get('dispatch', 0)} "
+            f"| {k.get('transfer', 0)} | {k.get('graph_launch', 0)} "
+            f"| {k.get('progress', 0)} "
+            f"| {_ms(t.get('total_dispatch_s', 0.0))} |")
+    return "\n".join(rows)
+
+
 def hillclimb_table(recs):
     rows = ["| label | arch × shape | compute (ms) | memory (ms) "
             "| collective (ms) | bound | roofline frac |",
@@ -90,7 +113,8 @@ def main():
     ap.add_argument("--dryrun", default="results/dryrun.jsonl")
     ap.add_argument("--hillclimb", default="results/hillclimb.jsonl")
     ap.add_argument("--section", default="all",
-                    choices=["all", "roofline", "multi", "hillclimb"])
+                    choices=["all", "roofline", "multi", "trace",
+                             "hillclimb"])
     args = ap.parse_args()
     dr = _load(args.dryrun)
     hc = _load(args.hillclimb)
@@ -100,6 +124,9 @@ def main():
     if args.section in ("all", "multi"):
         print("\n### Multi-pod (2×16×16 = 512 chips) collective check\n")
         print(collective_table(dr, "multi"))
+    if args.section in ("all", "trace"):
+        print("\n### Unified submission-event timeline (TraceSession)\n")
+        print(trace_table(dr, "single"))
     if args.section in ("all", "hillclimb"):
         print("\n### Hillclimb iterations\n")
         print(hillclimb_table(hc))

@@ -37,6 +37,7 @@ def main() -> None:
     print(out)
     for r in reqs[:2]:
         print(f"req {r.uid}: {r.tokens}")
+    print(srv.session.report(max_events=30))
 
 
 if __name__ == "__main__":

@@ -44,6 +44,7 @@ def main() -> None:
     out = tr.train(args.steps)
     print(out)
     print(tr.submission_report())
+    print(tr.trace_report(max_events=30))
 
 
 if __name__ == "__main__":

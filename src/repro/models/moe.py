@@ -163,7 +163,7 @@ def moe_sorted_smap(p: Params, cfg: ModelConfig, x: jax.Array
     volume ~(k·cf + shared)× — the dominant term of the qwen2-moe train cell.
     Falls back to ``moe_sorted`` when no mesh context is active.
     """
-    from ..distributed.context import dp_axes_active, get_mesh
+    from ..distributed.context import dp_axes_active, get_mesh, shard_map
     mesh = get_mesh()
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         return moe_sorted(p, cfg, x)
@@ -194,7 +194,7 @@ def moe_sorted_smap(p: Params, cfg: ModelConfig, x: jax.Array
         shared_specs = (P(None, None, "model"), P(None, None, "model"),
                         P(None, "model", None))
 
-    y = jax.shard_map(
+    y = shard_map(
         body, mesh=mesh,
         in_specs=(P(dpa, None, None), P(dpa, None, None), P(dpa, None, None),
                   P(None, None, "model"), P(None, None, "model"),

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core.doorbell import DoorbellTracker
+from ..core.session import TraceSession
 from ..models import get_model
 
 __all__ = ["Server", "Request"]
@@ -32,13 +32,17 @@ class Request:
 
 class Server:
     def __init__(self, cfg: ModelConfig, batch_size: int, max_seq: int,
-                 tokens_per_launch: int = 1, seed: int = 0) -> None:
+                 tokens_per_launch: int = 1, seed: int = 0,
+                 session: Optional[TraceSession] = None) -> None:
         self.cfg = cfg
         self.B = batch_size
         self.max_seq = max_seq
         self.T = max(1, tokens_per_launch)
         self.model = get_model(cfg)
-        self.tracker = DoorbellTracker()
+        # Shared timeline: pass a session to merge serving events with a
+        # trainer's or a benchmark's; otherwise the server owns one.
+        self.session = session or TraceSession(name="server")
+        self.tracker = self.session.doorbell
         self.params = self.model.init_params(jax.random.PRNGKey(seed))
 
         self._prefill = self.tracker.wrap(
@@ -71,6 +75,9 @@ class Server:
         for i, r in enumerate(requests):
             toks[i, S - len(r.prompt):] = r.prompt      # left-pad
         t0 = time.perf_counter()
+        # session may be shared with other consumers: report per-run deltas
+        db0 = self.tracker.count
+        ev0 = self.session.n_events
         state, logits = self._prefill(self.params, jnp.asarray(toks))
         nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
         max_new = max(r.max_new_tokens for r in requests)
@@ -93,11 +100,13 @@ class Server:
         tokens = np.stack([np.asarray(t) for t in out], axis=1)  # [B, new]
         for i, r in enumerate(requests):
             r.tokens = tokens[i, :r.max_new_tokens].tolist()
+        doorbells = self.tracker.count - db0
         return {
             "wall_s": wall,
-            "doorbells": self.tracker.count,
+            "doorbells": doorbells,
             "new_tokens": int(min(produced, max_new)) * len(requests),
             "tokens_per_doorbell":
                 min(produced, max_new) * len(requests)
-                / max(1, self.tracker.count),
+                / max(1, doorbells),
+            "trace_events": self.session.n_events - ev0,
         }

@@ -8,6 +8,9 @@ Submission-aware by construction (the paper's lesson as defaults):
   drops by K×, the CUDA-13.0-and-beyond end point of the paper's §6.3.
 * **doorbell accounting** — every dispatch is recorded by a DoorbellTracker;
   ``submission_report()`` is the per-run Listing-1 analogue.
+* **unified trace session** — one :class:`~repro.core.session.TraceSession`
+  drives all instrumentation (dispatch, progress, compile); pass ``session=``
+  to share a timeline with a Server/benchmark, or read ``trainer.session``.
 * **async checkpoints, deterministic data, heartbeat fault monitor.**
 """
 from __future__ import annotations
@@ -21,8 +24,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..configs.shapes import ShapeConfig
-from ..core.doorbell import DoorbellTracker
-from ..core.semaphore import ProgressTracker
+from ..core.session import TraceSession
 from ..data.pipeline import make_pipeline
 from ..models import get_model
 from ..optim.adamw import adamw_init
@@ -42,14 +44,18 @@ class Trainer:
                  ckpt_every: int = 100,
                  grad_compression: Optional[str] = None,
                  peak_lr: float = 3e-4,
-                 seed: int = 0) -> None:
+                 seed: int = 0,
+                 session: Optional[TraceSession] = None) -> None:
         self.cfg = cfg
         self.shape = shape
         self.mesh = mesh
         self.k = max(1, steps_per_launch)
         self.model = get_model(cfg)
-        self.tracker = DoorbellTracker()
-        self.progress = ProgressTracker()
+        # One session carries every event this trainer emits (dispatch,
+        # progress, compile); callers share theirs to merge timelines.
+        self.session = session or TraceSession(name="trainer")
+        self.tracker = self.session.doorbell
+        self.progress = self.session.progress
         self.monitor = FleetMonitor(n_workers=1)
         self.grad_compression = grad_compression
         self.ckpt = (CheckpointManager(ckpt_dir, every_steps=ckpt_every)
@@ -110,6 +116,9 @@ class Trainer:
             pipe = make_pipeline(self.cfg, self.shape, self.seed,
                                  start_step=self.step)
         t0 = time.perf_counter()
+        # session may be shared with other consumers: report per-run deltas
+        db0 = self.tracker.count
+        ev0 = self.session.n_events
         try:
             while self.step < num_steps:
                 if self.k == 1:
@@ -143,10 +152,18 @@ class Trainer:
             if self.ckpt is not None:
                 self.ckpt.wait()
         wall = time.perf_counter() - t0
+        doorbells = self.tracker.count - db0
         return {"steps": self.step, "wall_s": wall,
                 "final_loss": self.metrics_log[-1]["loss"],
-                "doorbells": self.tracker.count,
-                "steps_per_doorbell": self.step / max(1, self.tracker.count)}
+                "doorbells": doorbells,
+                "steps_per_doorbell": self.step / max(1, doorbells),
+                "trace_events": self.session.n_events - ev0}
 
     def submission_report(self) -> Dict[str, Any]:
-        return self.tracker.summary()
+        out = self.tracker.summary()
+        out["session"] = self.session.summary()
+        return out
+
+    def trace_report(self, max_events: int = 60) -> str:
+        """Listing-1-style interleaved timeline for this trainer's run."""
+        return self.session.report(max_events=max_events)

@@ -1,0 +1,239 @@
+"""Unified TraceSession: ordering, sinks, ambient activation, legacy parity."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CommandStreamCapture, DoorbellTracker, ExecGraph,
+                        HybridMover, JsonlSink, ProgressTracker, RingBufferSink,
+                        TraceEvent, TraceSession, current_session)
+
+
+# -- event ordering across mixed kinds -------------------------------------
+
+def test_mixed_kinds_share_one_monotonic_sequence():
+    with TraceSession("mix") as sess:
+        cs = sess.capture.lower_and_compile("f", lambda x: x * 2,
+                                            args=(jnp.ones(4),))
+        f = sess.wrap(cs.compiled, "f_dispatch")
+        f(jnp.ones(4))
+        sess.mover.put(np.zeros(8, np.float32))
+        f(jnp.ones(4))
+        tok = sess.progress.release(jnp.ones(2))
+        sess.progress.wait(tok)
+    evs = sess.timeline()
+    assert [e.seq for e in evs] == list(range(len(evs)))
+    assert [e.kind for e in evs] == ["compile", "dispatch", "transfer",
+                                    "dispatch", "progress", "progress"]
+    # one shared timestamp base: t is non-negative and bounded by the wall
+    assert all(e.t >= 0 for e in evs)
+
+
+def test_timeline_filters_and_graph_launch_interleaving():
+    with TraceSession("graphs") as sess:
+        g = ExecGraph(chain_len=3, width=16)
+        g.launch("per_op", session=sess)
+        g.launch("multistep", session=sess)
+    launches = sess.timeline(kinds="graph_launch")
+    assert [e.meta["mode"] for e in launches] == ["per_op", "multistep"]
+    assert launches[0].meta["doorbells"] == 3
+    assert launches[1].meta["doorbells"] == 1
+    # the per-op doorbell rings appear on the same timeline, before the
+    # multistep launch event
+    dispatches = sess.timeline(kinds="dispatch", name="per_op_dispatch")
+    assert len(dispatches) == 3
+    assert all(d.seq < launches[1].seq for d in dispatches)
+
+
+# -- ring buffer bounding ---------------------------------------------------
+
+def test_ring_buffer_bounded_keeps_latest():
+    sess = TraceSession("ring", ring_size=10)
+    for i in range(25):
+        sess.emit("dispatch", f"d{i}")
+    assert sess.n_events == 25
+    evs = sess.timeline()
+    assert len(evs) == 10
+    assert [e.name for e in evs] == [f"d{i}" for i in range(15, 25)]
+    assert sess.ring.dropped == 15
+    assert sess.summary()["dropped"] == 15
+
+
+def test_emit_rejects_unknown_kind():
+    sess = TraceSession("bad")
+    with pytest.raises(ValueError):
+        sess.emit("doorbell", "nope")
+
+
+# -- JSONL sink round-trip --------------------------------------------------
+
+def test_jsonl_sink_round_trip(tmp_path):
+    path = os.path.join(tmp_path, "trace.jsonl")
+    with TraceSession("jsonl", jsonl_path=path) as sess:
+        sess.emit("dispatch", "a", dur_s=1e-3, payload_bytes=64, mode="x")
+        sess.emit("transfer", "b", complete_s=2e-3)
+    loaded = JsonlSink.load(path)
+    assert [e.to_dict() for e in loaded] == \
+        [e.to_dict() for e in sess.timeline()]
+    # file is valid JSONL
+    with open(path) as f:
+        lines = [json.loads(l) for l in f]
+    assert len(lines) == 2 and lines[0]["meta"] == {"mode": "x"}
+
+
+def test_custom_sink_receives_every_event():
+    sink = RingBufferSink(maxlen=100)
+    with TraceSession("sinks", sinks=[sink]) as sess:
+        sess.emit("progress", "p")
+        sess.emit("dispatch", "d")
+    assert [e.name for e in sink.events()] == ["p", "d"]
+
+
+# -- ambient activation (contextvars) ---------------------------------------
+
+def test_ambient_session_install_and_teardown():
+    assert current_session() is None
+    with TraceSession("outer") as outer:
+        assert current_session() is outer
+        with TraceSession("inner") as inner:
+            assert current_session() is inner
+        assert current_session() is outer
+    assert current_session() is None
+
+
+def test_tracker_created_before_session_reports_into_it():
+    tracker = DoorbellTracker()          # armed before any session exists
+    with TraceSession("late") as sess:
+        tracker.ring("late_ring", payload=7)
+    assert tracker.count == 1
+    evs = sess.timeline(kinds="dispatch")
+    assert len(evs) == 1 and evs[0].name == "late_ring"
+    assert evs[0].payload_bytes == 7
+    # outside the block, the same tracker is silent again
+    tracker.ring("after")
+    assert sess.n_events == 1
+
+
+def test_explicit_injection_wins_over_ambient():
+    mine = TraceSession("mine")
+    tracker = DoorbellTracker(session=mine)
+    with TraceSession("ambient") as amb:
+        tracker.ring("ding")
+    assert len(mine.timeline()) == 1
+    assert len(amb.timeline()) == 0
+
+
+# -- legacy standalone entry points record identically -----------------------
+
+def test_doorbell_standalone_records_identically():
+    def run_one():
+        t = DoorbellTracker()
+        wrapped = t.wrap(lambda x: x + 1, "inc", block=True)
+        wrapped(jnp.ones(4))
+        t.ring("manual", payload=3)
+        return t
+
+    bare = run_one()
+    with TraceSession("wrapped"):
+        inside = run_one()
+    for a, b in zip(bare.records, inside.records):
+        assert (a.seq, a.name, a.payload_bytes) == \
+            (b.seq, b.name, b.payload_bytes)
+    assert bare.summary()["by_name"].keys() == \
+        inside.summary()["by_name"].keys()
+    assert bare.count == inside.count == 2
+
+
+def test_capture_standalone_records_identically():
+    def run_one():
+        cap = CommandStreamCapture()
+        return cap.lower_and_compile("g", lambda x: x @ x,
+                                     args=(jnp.ones((4, 4)),))
+
+    bare = run_one()
+    with TraceSession("wrapped") as sess:
+        inside = run_one()
+    assert bare.name == inside.name == "g"
+    assert bare.n_ops == inside.n_ops
+    assert bare.command_bytes == inside.command_bytes
+    assert [e.kind for e in sess.timeline()] == ["compile"]
+
+
+def test_wrap_preserves_function_metadata():
+    def my_dispatch(x):
+        """docstring survives wrapping"""
+        return x
+
+    t = DoorbellTracker()
+    wrapped = t.wrap(my_dispatch, "d")
+    assert wrapped.__name__ == "my_dispatch"
+    assert wrapped.__doc__ == "docstring survives wrapping"
+
+
+def test_hybrid_mover_and_progress_legacy_paths():
+    mover = HybridMover(threshold=1024)
+    _, rec = mover.put(np.zeros(16, np.float32))
+    assert rec.mode == "inline" and mover.stats()["inline"] == 1
+    pt = ProgressTracker()
+    tok = pt.release(jnp.ones(2))
+    pt.wait(tok)
+    assert tok.completed
+
+
+# -- one session drives trainer AND server (acceptance criterion) -----------
+
+def test_one_session_drives_trainer_and_server():
+    from repro.configs import SMOKE_ARCHS
+    from repro.configs.shapes import ShapeConfig
+    from repro.runtime.server import Request, Server
+    from repro.runtime.trainer import Trainer
+
+    cfg = SMOKE_ARCHS["deepseek-7b"]
+    shape = ShapeConfig("tiny", 64, 4, "train")
+    sess = TraceSession("prod")
+    tr = Trainer(cfg, shape, steps_per_launch=2, session=sess)
+    out = tr.train(2)
+    srv = Server(cfg, batch_size=2, max_seq=64, session=sess)
+    o = srv.serve([Request(0, np.arange(4, dtype=np.int32),
+                           max_new_tokens=4)])
+    assert tr.session is srv.session is sess
+    assert out["doorbells"] == 1 and o["doorbells"] >= 2
+    evs = sess.timeline()
+    assert [e.seq for e in evs] == list(range(len(evs)))
+    names = {e.name for e in evs}
+    assert "train_k_steps" in names          # trainer dispatch
+    assert "prefill" in names                # server dispatch
+    kinds = {e.kind for e in evs}
+    assert {"dispatch", "progress"} <= kinds
+
+
+# -- summary / report -------------------------------------------------------
+
+def test_summary_is_json_serializable_and_counts_by_kind():
+    with TraceSession("summ") as sess:
+        sess.mover.put(np.zeros(4, np.float32))
+        sess.emit("dispatch", "d", payload_bytes=10)
+        sess.emit("dispatch", "d", payload_bytes=5)
+    s = sess.summary()
+    json.dumps(s)               # must not raise
+    assert s["by_kind"] == {"transfer": 1, "dispatch": 2}
+    assert s["by_name"]["d"]["events"] == 2
+    assert s["by_name"]["d"]["payload_bytes"] == 15
+
+
+def test_report_interleaves_all_kinds_in_submission_order():
+    with TraceSession("rep") as sess:
+        cs = sess.capture.lower_and_compile("h", lambda x: x - 1,
+                                            args=(jnp.ones(2),))
+        sess.wrap(cs.compiled, "h_disp")(jnp.ones(2))
+        sess.mover.put(np.zeros(2, np.float32))
+    assert [e.kind for e in sess.timeline()] == \
+        ["compile", "dispatch", "transfer"]
+    text = sess.report()
+    event_lines = [l for l in text.splitlines()
+                   if l.strip()[:1].isdigit() and "ms" in l]
+    assert [l.split()[2] for l in event_lines] == \
+        ["compile", "dispatch", "transfer"]
+    assert "TRACE SESSION rep" in text
