@@ -24,22 +24,28 @@ LARGE_SIZES = [32 * 1024, 128 * 1024, 512 * 1024,
                2 * 2**20, 8 * 2**20, 32 * 2**20]       # Table 2 right half
 
 
-def run() -> List[str]:
+def run(quick: bool = False) -> List[str]:
+    """``quick`` shrinks sweeps to CI scale (fewer sizes, fewer iters)."""
     rows: List[str] = []
+    exp_sizes = EXP_SIZES[::3] if quick else EXP_SIZES
+    iters = 3 if quick else 10
     for mode in ("inline", "direct"):
-        sweep = sweep_transfer(EXP_SIZES, mode=mode, iters=10, warmup=3)
+        sweep = sweep_transfer(exp_sizes, mode=mode, iters=iters, warmup=2)
         floor_us = sweep[0]["latency_us"]
         for r in sweep:
             overhead = 100.0 * min(1.0, floor_us / max(r["latency_us"], 1e-9))
             rows.append(
                 f"dma_{mode}_exp,{r['nbytes']},{r['latency_us']:.2f},"
                 f"{r['bandwidth_gib_s']:.3f},{overhead:.1f}")
-    for mode in ("inline", "direct"):
-        for r in sweep_transfer(LIN_SIZES, mode=mode, iters=5, warmup=2):
-            rows.append(
-                f"dma_{mode}_lin,{r['nbytes']},{r['latency_us']:.2f},"
-                f"{r['bandwidth_gib_s']:.3f},")
-    for r in sweep_transfer(LARGE_SIZES, mode="direct", iters=5, warmup=2):
+    if not quick:
+        for mode in ("inline", "direct"):
+            for r in sweep_transfer(LIN_SIZES, mode=mode, iters=5, warmup=2):
+                rows.append(
+                    f"dma_{mode}_lin,{r['nbytes']},{r['latency_us']:.2f},"
+                    f"{r['bandwidth_gib_s']:.3f},")
+    large = LARGE_SIZES[:3] if quick else LARGE_SIZES
+    for r in sweep_transfer(large, mode="direct", iters=3 if quick else 5,
+                            warmup=2):
         rows.append(
             f"dma_direct_large,{r['nbytes']},{r['latency_us']:.2f},"
             f"{r['bandwidth_gib_s']:.3f},")

@@ -23,11 +23,12 @@ CHAINS_LONG = [500, 1000, 2000]
 MODES = ("per_op", "graphed", "multistep")
 
 
-def run(width: int = 4096,
+def run(width: int = 4096, quick: bool = False,
         session: Optional[TraceSession] = None) -> List[str]:
     rows: List[str] = []
     fits = {m: ([], []) for m in MODES}
-    for K in CHAINS_SHORT + CHAINS_LONG:
+    chains = [1, 10, 50, 100] if quick else CHAINS_SHORT + CHAINS_LONG
+    for K in chains:
         for mode in MODES:
             if mode == "per_op" and K > 500:
                 continue  # python-loop dispatch at K=2000 adds no information

@@ -57,14 +57,15 @@ def _stage_split(width: int = 1024,
     ]
 
 
-def _multistep_economy(session: Optional[TraceSession] = None) -> List[str]:
+def _multistep_economy(quick: bool = False,
+                       session: Optional[TraceSession] = None) -> List[str]:
     rows = []
     cfg = SMOKE_ARCHS["deepseek-7b"]
     shape = ShapeConfig("bench", 64, 4, "train")
-    for k in (1, 4, 16):
+    for k in ((1, 4) if quick else (1, 4, 16)):
         tr = Trainer(cfg, shape, steps_per_launch=k, seed=0,
                      session=session)
-        out = tr.train(16)
+        out = tr.train(8 if quick else 16)
         rows.append(
             f"trainer_k{k},{out['steps']},"
             f"{out['wall_s']/out['steps']*1e6:.1f},"
@@ -73,8 +74,10 @@ def _multistep_economy(session: Optional[TraceSession] = None) -> List[str]:
     return rows
 
 
-def run(session: Optional[TraceSession] = None) -> List[str]:
-    return _stage_split(session=session) + _multistep_economy(session=session)
+def run(quick: bool = False,
+        session: Optional[TraceSession] = None) -> List[str]:
+    return (_stage_split(session=session)
+            + _multistep_economy(quick=quick, session=session))
 
 
 HEADER = "name,steps,us_per_step,doorbells,steps_per_doorbell,final_loss"

@@ -1,32 +1,58 @@
-"""Benchmark harness: one section per paper table/figure.
+"""Benchmark harness: one section per paper table/figure, JSON artifact out.
 
   bench_dma        — Fig. 6 + Table 2 (inline vs direct DMA protocols)
   bench_graphs     — Fig. 7/9/10 (graph launch scaling, footprint law)
   bench_submission — §6.2/§7 (stage decomposition, multi-step economy)
+  bench_policy     — tuned-policy before/after (python -m repro.tune)
   bench_kernels    — per-kernel interpret-mode sanity timings
 
-Prints ``name,value...`` CSV blocks.  Wall-clock numbers are host (CPU
-container) figures; device-side terms come from the dry-run roofline
-(EXPERIMENTS.md), not from here.
+Prints ``name,value...`` CSV blocks (unchanged), and additionally writes a
+machine-readable artifact (``--out``, default ``BENCH_6.json``) recording
+section -> rows (typed by the section header), the unified TraceSession
+summary, and the active tuned policy with its before/after objective — one
+point of the ROADMAP's perf trajectory, regenerated per PR and diffable in
+CI.  ``--quick`` shrinks every sweep to CI scale.
 
 ONE :class:`repro.core.TraceSession` spans every section — installed as the
 ambient session and passed explicitly where a section builds its own objects
 — so the final block is the unified, submission-ordered event summary across
-DMA, graph-launch, and trainer benchmarks.
+DMA, graph-launch, trainer, and policy benchmarks.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--out BENCH_6.json]
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 import time
+from typing import Any, Dict, List
+
+PR_NUMBER = 6
 
 
-def _section(title: str, header: str, rows) -> None:
-    print(f"# === {title} ===")
-    print(header)
+def _parse_cell(v: str) -> Any:
+    if v == "":
+        return None
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def _rows_to_json(header: str, rows: List[str]) -> List[Dict[str, Any]]:
+    """CSV rows -> list of {column: typed value} dicts, keyed by header."""
+    cols = header.split(",")
+    out = []
     for r in rows:
-        print(r)
-    sys.stdout.flush()
+        cells = r.split(",")
+        cells += [""] * (len(cols) - len(cells))
+        out.append({c: _parse_cell(v) for c, v in zip(cols, cells)})
+    return out
 
 
 def bench_kernels_rows():
@@ -53,20 +79,72 @@ def bench_kernels_rows():
 
 
 def main() -> None:
-    from repro.core import TraceSession
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=f"BENCH_{PR_NUMBER}.json",
+                    help="JSON artifact path ('' to skip writing)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-scale sweeps (fewer sizes/chains/steps)")
+    ap.add_argument("--arch", default="gemma-2b",
+                    help="arch whose tuned policy the policy section benches")
+    args = ap.parse_args()
 
-    from . import bench_dma, bench_graphs, bench_submission
+    from repro.core import TraceSession
+    from repro.tune.policy import load_policy
+
+    from . import bench_dma, bench_graphs, bench_policy, bench_submission
+
+    sections: Dict[str, Dict[str, Any]] = {}
+
+    def _section(key: str, title: str, header: str, rows: List[str]) -> None:
+        print(f"# === {title} ===")
+        print(header)
+        for r in rows:
+            print(r)
+        sys.stdout.flush()
+        sections[key] = {"title": title, "header": header.split(","),
+                         "rows": _rows_to_json(header, rows)}
+
     with TraceSession(name="benchmarks") as sess:
-        _section("DMA protocols (Fig.6 / Table 2)", bench_dma.HEADER,
-                 bench_dma.run())
-        _section("Graph launch scaling (Fig.7/9/10)", bench_graphs.HEADER,
-                 bench_graphs.run(session=sess))
-        _section("Submission stage split (§6.2/§7)", bench_submission.HEADER,
-                 bench_submission.run(session=sess))
-        _section("Kernel interpret-mode timings", "name,ms",
+        _section("dma", "DMA protocols (Fig.6 / Table 2)", bench_dma.HEADER,
+                 bench_dma.run(quick=args.quick))
+        _section("graphs", "Graph launch scaling (Fig.7/9/10)",
+                 bench_graphs.HEADER,
+                 bench_graphs.run(quick=args.quick, session=sess))
+        _section("submission", "Submission stage split (§6.2/§7)",
+                 bench_submission.HEADER,
+                 bench_submission.run(quick=args.quick, session=sess))
+        _section("policy", "Tuned submission policy (repro.tune)",
+                 bench_policy.HEADER,
+                 bench_policy.run(arch=args.arch, quick=args.quick,
+                                  session=sess))
+        _section("kernels", "Kernel interpret-mode timings", "name,ms",
                  bench_kernels_rows())
+    summary = sess.summary()
     print("# === Unified trace session ===")
-    print(json.dumps(sess.summary(), indent=2, sort_keys=True))
+    print(json.dumps(summary, indent=2, sort_keys=True))
+
+    if args.out:
+        from repro.configs import SMOKE_ARCHS
+        cfg = SMOKE_ARCHS.get(args.arch)
+        pol = load_policy(getattr(cfg, "name", None) or args.arch)
+        artifact = {
+            "pr": PR_NUMBER,
+            "created_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "quick": bool(args.quick),
+            "arch": args.arch,
+            "sections": sections,
+            "session_summary": summary,
+            "policy": pol.to_dict() if pol is not None else None,
+            "tuning": ({"before": pol.objective.get("before"),
+                        "after": pol.objective.get("after"),
+                        "improvement": pol.objective.get("improvement"),
+                        "knobs": pol.knobs}
+                       if pol is not None else None),
+        }
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.out}")
 
 
 if __name__ == "__main__":

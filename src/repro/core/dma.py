@@ -25,6 +25,7 @@ threshold (default 24 KiB, mirroring the paper's observed switch point).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -81,8 +82,14 @@ _inline_cache = _InlineCache()
 
 
 def _fingerprint(x: np.ndarray) -> Tuple:
-    # payload identity: shape/dtype + content digest (cheap xxhash-less)
-    return (x.shape, str(x.dtype), hash(x.tobytes()))
+    """Payload identity: shape/dtype + stable content digest.
+
+    ``blake2b`` (not ``hash()``, which is salted per process) so the key is
+    deterministic across processes and safe to persist alongside tuned
+    policies.
+    """
+    digest = hashlib.blake2b(x.tobytes(), digest_size=16).hexdigest()
+    return (x.shape, str(x.dtype), digest)
 
 
 def _emit_transfer(session: Optional[TraceSession], rec: TransferRecord,
@@ -106,7 +113,9 @@ def inline_put(x: np.ndarray, device: Optional[Any] = None,
     travels inside the command stream and the compute path writes it out.
     """
     x = np.asarray(x)
-    key = _fingerprint(x)
+    # the destination is part of the executable (a materializer pinned to
+    # device A cannot serve a put to device B), so it keys the cache too
+    key = _fingerprint(x) + (None if device is None else str(device),)
     t0 = time.perf_counter()
     compiled = _inline_cache.get(key) if _cache else None
     build_s = 0.0
@@ -117,7 +126,11 @@ def inline_put(x: np.ndarray, device: Optional[Any] = None,
             # +0 forces a real on-device materialization of the constant
             return const + jnp.zeros((), const.dtype)
 
-        lowered = jax.jit(materialize).lower()
+        jit_kwargs: Dict[str, Any] = {}
+        if device is not None:
+            jit_kwargs["out_shardings"] = jax.sharding.SingleDeviceSharding(
+                device)
+        lowered = jax.jit(materialize, **jit_kwargs).lower()
         compiled = lowered.compile()
         build_s = time.perf_counter() - t0
         if _cache:
@@ -160,11 +173,20 @@ class HybridMover:
     >>> y, rec = mover.put(np.ones(128, np.float32))
     >>> rec.mode
     'inline'
+
+    ``threshold=None`` (the default) resolves through the active tuned
+    policy (:mod:`repro.tune.policy`), falling back to the paper's observed
+    switch point — so autotuned deployments pick up their learned threshold
+    without every call site knowing about policies.
     """
 
-    def __init__(self, threshold: int = INLINE_THRESHOLD_DEFAULT,
+    def __init__(self, threshold: Optional[int] = None,
                  device: Optional[Any] = None,
                  session: Optional[TraceSession] = None) -> None:
+        if threshold is None:
+            from ..tune.policy import resolve_knob
+            threshold = resolve_knob("dma_threshold_bytes",
+                                     INLINE_THRESHOLD_DEFAULT)
         self.threshold = int(threshold)
         self.device = device
         self.records: List[TransferRecord] = []

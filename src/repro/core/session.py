@@ -212,6 +212,8 @@ class TraceSession:
         # summary() stays exact even after the bounded ring drops events.
         self._by_kind: Dict[str, int] = {}
         self._by_name: Dict[str, Dict[str, Any]] = {}
+        self._kind_dur_s: Dict[str, float] = {}
+        self._kind_payload: Dict[str, int] = {}
         self._total_payload = 0
         self._dispatch_s = 0.0
         self.ring = RingBufferSink(ring_size)
@@ -274,6 +276,9 @@ class TraceSession:
                             complete_s=complete_s,
                             payload_bytes=payload_bytes, meta=meta)
             self._by_kind[kind] = self._by_kind.get(kind, 0) + 1
+            self._kind_dur_s[kind] = self._kind_dur_s.get(kind, 0.0) + dur_s
+            self._kind_payload[kind] = (self._kind_payload.get(kind, 0)
+                                        + payload_bytes)
             d = self._by_name.setdefault(name, {"events": 0, "dur_s": 0.0,
                                                 "payload_bytes": 0})
             d["events"] += 1
@@ -328,6 +333,8 @@ class TraceSession:
         with self._lock:
             by_kind = dict(self._by_kind)
             by_name = {k: dict(v) for k, v in self._by_name.items()}
+            kind_dur = dict(self._kind_dur_s)
+            kind_payload = dict(self._kind_payload)
             payload = self._total_payload
             dispatch_s = self._dispatch_s
         return {
@@ -335,6 +342,8 @@ class TraceSession:
             "events": self.ring.n_emitted,
             "dropped": self.ring.dropped,
             "by_kind": by_kind,
+            "dur_s_by_kind": kind_dur,
+            "payload_by_kind": kind_payload,
             "by_name": by_name,
             "total_payload_bytes": payload,
             "total_dispatch_s": dispatch_s,

@@ -1,10 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
-# The two lines above MUST run before any jax import: jax locks the device
-# count at first init.  512 placeholder host devices back the production
-# meshes; nothing is ever allocated (ShapeDtypeStruct stand-ins only).
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
 For each cell this:
@@ -22,6 +15,13 @@ Usage:
   python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k --mesh single
   python -m repro.launch.dryrun --all [--mesh both] [--out results/dryrun.jsonl]
 """
+import os
+# Must precede any jax import: jax locks the device count at first init.
+# 512 placeholder host devices back the production meshes; nothing is ever
+# allocated (ShapeDtypeStruct stand-ins only).
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
 import argparse
 import json
 import time

@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
-
 """Perf hillclimbing driver: one (arch x shape x mesh) cell per invocation,
 with config overrides, full command-stream breakdown, and optional Pallas
 kernel credit.  Appends labeled records to results/hillclimb.jsonl so the
@@ -9,26 +5,23 @@ EXPERIMENTS.md SSPerf log can show every hypothesis -> change -> before/after.
 
   python -m repro.launch.hillclimb --arch llava-next-34b --shape prefill_32k \
       --label sp_on --set seq_shard=True --set attn_chunk=2048
+
+For the generalized, objective-driven search over the exposed submission
+knobs (DMA threshold, tokens/steps per launch), see ``python -m repro.tune``
+(:mod:`repro.tune.search` is this driver's coordinate-descent descendant).
 """
+import os
+# Must precede any jax import: jax locks the device count at first init.
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
 import argparse
 import json
 from typing import Any, Dict
 
 from ..core import adjusted, analyze, attribute
+from ..tune.search import parse_spec, parse_value
 from .dryrun import run_cell
-
-
-def _parse_val(v: str) -> Any:
-    if v in ("True", "False"):
-        return v == "True"
-    try:
-        return int(v)
-    except ValueError:
-        pass
-    try:
-        return float(v)
-    except ValueError:
-        return v
 
 
 def main() -> None:
@@ -60,7 +53,7 @@ def main() -> None:
     overrides = {}
     for kv in args.set:
         k, v = kv.split("=", 1)
-        overrides[k] = _parse_val(v)
+        overrides[k] = parse_value(v)
 
     if args.pp:
         from .dryrun import run_pp_cell
@@ -81,19 +74,20 @@ def main() -> None:
     # ---- optional kernel credit -------------------------------------------
     credits: Dict[str, Any] = {}
     d_mem = d_flops = 0.0
+    # specs split on the LAST colon (tags are op paths that may contain ':')
     for spec in args.kernel_credit:
-        tag, io_bytes = spec.split(":")
+        tag, io_bytes = parse_spec(spec)
         a = attribute(cs, tag)
         d_mem += float(io_bytes) - a["memory_bytes"]
         credits[tag] = {"replaced_mem": a["memory_bytes"],
                         "with_io_bytes": float(io_bytes)}
     for spec in args.kernel_credit_flops:
-        tag, scale = spec.split(":")
+        tag, scale = parse_spec(spec)
         a = attribute(cs, tag)
         d_flops += (float(scale) - 1.0) * a["flops"]
         credits.setdefault(tag, {})["flops_scale"] = float(scale)
     if args.kernel_credit_mult:
-        min_mult, io_bytes = args.kernel_credit_mult.split(":")
+        min_mult, io_bytes = args.kernel_credit_mult.rsplit(":", 1)
         interior = sum((e.result_bytes + e.operand_bytes) * e.multiplier
                        for e in cs.stream.entries
                        if e.multiplier >= int(min_mult))

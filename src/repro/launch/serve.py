@@ -11,6 +11,7 @@ import numpy as np
 
 from ..configs import ARCHS, SMOKE_ARCHS
 from ..runtime.server import Request, Server
+from ..tune.policy import load_policy_for
 
 
 def main() -> None:
@@ -21,13 +22,21 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--tokens-per-launch", type=int, default=4)
+    ap.add_argument("--tokens-per-launch", type=int, default=None,
+                    help="unset -> auto-apply the tuned policy "
+                         "(python -m repro.tune), else 4")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = (SMOKE_ARCHS if args.smoke else ARCHS)[args.arch]
+    tpl = args.tokens_per_launch
+    if tpl is None and load_policy_for(cfg, activate=False) is None:
+        tpl = 4                      # legacy CLI default when untuned
     srv = Server(cfg, batch_size=args.batch, max_seq=args.max_seq,
-                 tokens_per_launch=args.tokens_per_launch, seed=args.seed)
+                 tokens_per_launch=tpl, seed=args.seed)
+    if srv.policy is not None:
+        print(f"policy: {srv.policy.arch} knobs={srv.policy.knobs} "
+              f"objective={srv.policy.objective.get('after')}")
     rng = np.random.default_rng(args.seed)
     reqs = [Request(i, rng.integers(0, cfg.vocab_size,
                                     size=args.prompt_len).astype(np.int32),

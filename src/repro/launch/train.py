@@ -14,6 +14,7 @@ import argparse
 from ..configs import ARCHS, SMOKE_ARCHS
 from ..configs.shapes import ShapeConfig
 from ..runtime.trainer import Trainer
+from ..tune.policy import load_policy_for
 
 
 def main() -> None:
@@ -24,7 +25,9 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--steps-per-launch", type=int, default=4)
+    ap.add_argument("--steps-per-launch", type=int, default=None,
+                    help="unset -> auto-apply the tuned policy "
+                         "(python -m repro.tune), else 4")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--grad-compression", default=None,
@@ -35,10 +38,16 @@ def main() -> None:
 
     cfg = (SMOKE_ARCHS if args.smoke else ARCHS)[args.arch]
     shape = ShapeConfig("train", args.seq, args.batch, "train")
-    tr = Trainer(cfg, shape, steps_per_launch=args.steps_per_launch,
+    spl = args.steps_per_launch
+    if spl is None and load_policy_for(cfg, activate=False) is None:
+        spl = 4                      # legacy CLI default when untuned
+    tr = Trainer(cfg, shape, steps_per_launch=spl,
                  ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                  grad_compression=args.grad_compression,
                  peak_lr=args.lr, seed=args.seed)
+    if tr.policy is not None:
+        print(f"policy: {tr.policy.arch} knobs={tr.policy.knobs} "
+              f"objective={tr.policy.objective.get('after')}")
     if args.ckpt_dir and tr.maybe_restore():
         print(f"restored at step {tr.step}")
     out = tr.train(args.steps)

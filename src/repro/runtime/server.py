@@ -32,12 +32,22 @@ class Request:
 
 class Server:
     def __init__(self, cfg: ModelConfig, batch_size: int, max_seq: int,
-                 tokens_per_launch: int = 1, seed: int = 0,
+                 tokens_per_launch: Optional[int] = None, seed: int = 0,
                  session: Optional[TraceSession] = None) -> None:
         self.cfg = cfg
         self.B = batch_size
         self.max_seq = max_seq
-        self.T = max(1, tokens_per_launch)
+        # ``tokens_per_launch=None`` -> auto-apply the tuned policy for this
+        # (model config, platform, device count), if one is persisted; an
+        # explicit value always wins (repro.tune is the tuner that writes
+        # these policies).
+        self.policy = None
+        if tokens_per_launch is None:
+            from ..tune.policy import load_policy_for
+            self.policy = load_policy_for(cfg)
+            tokens_per_launch = (self.policy.knob("tokens_per_launch", 1)
+                                 if self.policy else 1)
+        self.T = max(1, int(tokens_per_launch))
         self.model = get_model(cfg)
         # Shared timeline: pass a session to merge serving events with a
         # trainer's or a benchmark's; otherwise the server owns one.
@@ -70,6 +80,11 @@ class Server:
     def serve(self, requests: List[Request]) -> Dict[str, Any]:
         """Greedy-decode a batch of requests (padded to server batch)."""
         assert len(requests) <= self.B
+        for r in requests:
+            if len(r.prompt) > self.max_seq:
+                raise ValueError(
+                    f"request {r.uid}: prompt length {len(r.prompt)} exceeds "
+                    f"max_seq={self.max_seq}; the decode state would overrun")
         S = max(len(r.prompt) for r in requests)
         toks = np.zeros((self.B, S), np.int32)
         for i, r in enumerate(requests):
@@ -91,22 +106,27 @@ class Server:
                 produced += 1
             else:
                 state, tok_block = self._decode_T(self.params, state, nxt)
-                for t in range(min(self.T, max_new - produced)):
+                # the launch always scans T steps, but only the un-truncated
+                # prefix is useful output — account for exactly that many
+                take = min(self.T, max_new - produced)
+                for t in range(take):
                     out.append(tok_block[t])
                 nxt = tok_block[-1][:, None].astype(jnp.int32)
-                produced += self.T
+                produced += take
         jax.block_until_ready(out[-1])
         wall = time.perf_counter() - t0
         tokens = np.stack([np.asarray(t) for t in out], axis=1)  # [B, new]
         for i, r in enumerate(requests):
             r.tokens = tokens[i, :r.max_new_tokens].tolist()
         doorbells = self.tracker.count - db0
+        # useful tokens = what each request asked for, NOT max_new * B:
+        # heterogeneous requests decode to the batch max but only keep their
+        # own budget, and the tuner's objective reads exactly these fields.
+        new_tokens = int(sum(r.max_new_tokens for r in requests))
         return {
             "wall_s": wall,
             "doorbells": doorbells,
-            "new_tokens": int(min(produced, max_new)) * len(requests),
-            "tokens_per_doorbell":
-                min(produced, max_new) * len(requests)
-                / max(1, doorbells),
+            "new_tokens": new_tokens,
+            "tokens_per_doorbell": new_tokens / max(1, doorbells),
             "trace_events": self.session.n_events - ev0,
         }

@@ -39,7 +39,7 @@ __all__ = ["Trainer"]
 class Trainer:
     def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
                  mesh: Optional[Any] = None,
-                 steps_per_launch: int = 1,
+                 steps_per_launch: Optional[int] = None,
                  ckpt_dir: Optional[str] = None,
                  ckpt_every: int = 100,
                  grad_compression: Optional[str] = None,
@@ -49,7 +49,15 @@ class Trainer:
         self.cfg = cfg
         self.shape = shape
         self.mesh = mesh
-        self.k = max(1, steps_per_launch)
+        # ``steps_per_launch=None`` -> auto-apply the tuned policy for this
+        # (model config, platform, device count); explicit values win.
+        self.policy = None
+        if steps_per_launch is None:
+            from ..tune.policy import load_policy_for
+            self.policy = load_policy_for(cfg)
+            steps_per_launch = (self.policy.knob("steps_per_launch", 1)
+                                if self.policy else 1)
+        self.k = max(1, int(steps_per_launch))
         self.model = get_model(cfg)
         # One session carries every event this trainer emits (dispatch,
         # progress, compile); callers share theirs to merge timelines.

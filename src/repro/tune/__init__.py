@@ -1,0 +1,40 @@
+"""Submission-policy autotuner: measurement -> search -> apply.
+
+The paper's §7 closes on the observation that CUDA *hides* exactly the
+submission knobs it should expose — the inline/direct DMA threshold, graph
+granularity, launch batching — while Open MPI exposes its protocol thresholds
+as tunables.  This repo exposes those knobs (``core/dma.py`` threshold,
+``Server.tokens_per_launch``, trainer ``steps_per_launch`` / the graph
+footprint law in ``core/graphs.py``); this package closes the loop:
+
+* :mod:`repro.tune.objective` — scores a candidate from
+  :meth:`TraceSession.summary` (host dispatch time, doorbells per token,
+  transfer time/bandwidth);
+* :mod:`repro.tune.search`    — coordinate-descent / hillclimb over discrete
+  knob ladders (the generalization of ``launch/hillclimb.py``'s one-cell
+  driver);
+* :mod:`repro.tune.policy`    — the learned :class:`Policy` record, persisted
+  as JSON per (model config, platform, device count) and auto-applied by
+  ``Trainer``/``Server``/benchmarks;
+* :mod:`repro.tune.env`       — environment presets (XLA flags, host device
+  count, x64) applied before measurement so policies record the environment
+  they were learned under;
+* :mod:`repro.tune.autotune`  — the measurement workloads and the end-to-end
+  ``tune()`` entry point behind ``python -m repro.tune``.
+"""
+from .env import EnvPreset, snapshot_env
+from .objective import Metrics, Objective, ObjectiveWeights, metrics_from_summary
+from .policy import (Policy, activate_policy, active_policy, clear_active_policy,
+                     default_policy_dir, load_policy, load_policy_for,
+                     policy_path, resolve_knob, save_policy)
+from .search import Knob, SearchResult, Trial, coordinate_descent, parse_spec, parse_value
+
+__all__ = [
+    "EnvPreset", "snapshot_env",
+    "Metrics", "Objective", "ObjectiveWeights", "metrics_from_summary",
+    "Policy", "activate_policy", "active_policy", "clear_active_policy",
+    "default_policy_dir", "load_policy", "load_policy_for", "policy_path",
+    "resolve_knob", "save_policy",
+    "Knob", "SearchResult", "Trial", "coordinate_descent", "parse_spec",
+    "parse_value",
+]

@@ -1,0 +1,85 @@
+"""Computation-environment presets for tuning runs.
+
+A learned policy is only valid in the environment it was measured in — the
+same lesson as the paper's careful pinning of driver/CUDA versions.  An
+:class:`EnvPreset` captures the JAX environment knobs that change submission
+behaviour (XLA flags, forced host device count, x64, platform), applies them
+*before* measurement, and serializes into the policy JSON so a loader can
+check (or re-create) the conditions a policy was learned under.
+
+Style follows the bayespec ``config.py`` exemplar (SNIPPETS.md Snippet 1):
+small, explicit helpers over ``os.environ`` / ``jax.config``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+from typing import Any, Dict, Optional
+
+__all__ = ["EnvPreset", "snapshot_env"]
+
+
+def _jax_initialized() -> bool:
+    try:
+        from jax._src import xla_bridge
+        return bool(getattr(xla_bridge, "_backends", None))
+    except Exception:  # pragma: no cover - private API moved
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvPreset:
+    """Environment knobs applied before a tuning (or tuned) run.
+
+    ``host_device_count`` and ``xla_flags`` only take effect if applied
+    before the first JAX initialization — :meth:`apply` warns otherwise
+    instead of silently recording an environment that was never in force.
+    """
+
+    host_device_count: Optional[int] = None   # --xla_force_host_platform_device_count
+    xla_flags: str = ""                       # extra XLA_FLAGS, space-separated
+    x64: Optional[bool] = None                # jax_enable_x64
+    platform: Optional[str] = None            # cpu | gpu | tpu
+
+    def apply(self) -> None:
+        """Apply the preset; must run before the first ``jax`` device use."""
+        flags = []
+        if self.host_device_count is not None:
+            flags.append("--xla_force_host_platform_device_count="
+                         f"{int(self.host_device_count)}")
+        if self.xla_flags:
+            flags.append(self.xla_flags)
+        if flags:
+            if _jax_initialized():
+                warnings.warn(
+                    "EnvPreset.apply() after JAX initialization: XLA flags "
+                    "will not take effect for this process", RuntimeWarning)
+            os.environ["XLA_FLAGS"] = " ".join(
+                flags + [os.environ.get("XLA_FLAGS", "")]).strip()
+        if self.x64 is not None or self.platform is not None:
+            import jax
+            if self.x64 is not None:
+                jax.config.update("jax_enable_x64", bool(self.x64))
+            if self.platform is not None:
+                jax.config.update("jax_platform_name", self.platform)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "EnvPreset":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+def snapshot_env() -> Dict[str, Any]:
+    """Record the effective environment a measurement ran under."""
+    import jax
+    return {
+        "platform": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "x64": bool(jax.config.read("jax_enable_x64")),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "jax_version": jax.__version__,
+    }

@@ -12,3 +12,15 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_policies(monkeypatch, tmp_path):
+    """Tuned policies auto-apply by default (repro.tune); tests must not be
+    steered by whatever happens to live in results/policies — each test gets
+    an empty policy dir and a clean ambient policy."""
+    from repro.tune.policy import clear_active_policy
+    monkeypatch.setenv("REPRO_POLICY_DIR", str(tmp_path / "policies"))
+    clear_active_policy()
+    yield
+    clear_active_policy()

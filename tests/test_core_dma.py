@@ -1,9 +1,17 @@
 """Inline vs direct data-movement protocols (paper §6.2 analogue)."""
+import os
+import subprocess
+import sys
+import textwrap
+
 import numpy as np
 import pytest
 
 from repro.core import (HybridMover, INLINE_THRESHOLD_DEFAULT, direct_put,
                         inline_put, sweep_transfer)
+from repro.core.dma import _fingerprint
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def test_inline_put_roundtrip():
@@ -39,6 +47,70 @@ def test_threshold_is_tunable_unlike_cuda():
     _, rec = always_inline.put(np.zeros(1 << 16, np.uint8))
     assert rec.mode == "inline"
     assert INLINE_THRESHOLD_DEFAULT == 24 * 1024  # the paper's switch point
+
+
+def test_hybrid_mover_direct_at_exact_threshold():
+    """The switch is direct at nbytes == threshold (inline strictly below)."""
+    mover = HybridMover(threshold=1024)
+    _, below = mover.put(np.zeros(1023, np.uint8))
+    _, at = mover.put(np.zeros(1024, np.uint8))
+    assert below.mode == "inline"
+    assert at.mode == "direct"
+
+
+def test_fingerprint_is_content_digest():
+    x = np.arange(16, dtype=np.int32)
+    assert _fingerprint(x) == _fingerprint(x.copy())
+    assert _fingerprint(x) != _fingerprint(x + 1)
+    assert _fingerprint(x) != _fingerprint(x.astype(np.int64))
+
+
+@pytest.mark.slow
+def test_fingerprint_stable_across_processes():
+    """Regression: the cache key used salted hash(); it must be identical
+    under different PYTHONHASHSEED so it can persist alongside policies."""
+    code = textwrap.dedent("""
+        import numpy as np
+        from repro.core.dma import _fingerprint
+        print(_fingerprint(np.arange(256, dtype=np.float32)))
+    """)
+    outs = []
+    for seed in ("0", "12345"):
+        env = dict(os.environ, PYTHONHASHSEED=seed,
+                   PYTHONPATH=os.path.join(ROOT, "src"))
+        r = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, timeout=120)
+        assert r.returncode == 0, r.stderr[-2000:]
+        outs.append(r.stdout.strip())
+    assert outs[0] == outs[1] != ""
+
+
+@pytest.mark.slow
+def test_inline_put_honors_device():
+    """Regression: the inline path ignored ``device``, so HybridMover
+    silently mis-placed small transfers on the default device."""
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.core.dma import HybridMover, inline_put
+        d1 = jax.devices()[1]
+        y, rec = inline_put(np.arange(64, dtype=np.float32), device=d1)
+        assert rec.mode == "inline"
+        assert y.devices() == {d1}, y.devices()
+        # cache must not serve a device-0 executable for a device-1 put
+        y0, _ = inline_put(np.arange(64, dtype=np.float32))
+        assert y0.devices() == {jax.devices()[0]}, y0.devices()
+        mover = HybridMover(threshold=1 << 20, device=d1)
+        ym, recm = mover.put(np.zeros(128, np.float32))
+        assert recm.mode == "inline" and ym.devices() == {d1}
+        print("ok")
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert r.stdout.strip() == "ok"
 
 
 def test_sweep_shapes():

@@ -67,6 +67,34 @@ def test_hybrid_mover_mode_is_threshold_function(threshold, nbytes):
     assert rec.mode == ("inline" if x.nbytes < threshold else "direct")
 
 
+@given(st.integers(1, 1 << 20))
+@settings(**SET)
+def test_hybrid_mover_direct_at_exact_threshold(nbytes):
+    """Boundary law: a payload of exactly threshold bytes goes direct."""
+    _, rec = HybridMover(threshold=nbytes).put(np.zeros(nbytes, np.uint8))
+    assert rec.mode == "direct"
+
+
+@given(st.floats(0, 10, allow_nan=False), st.floats(0, 10, allow_nan=False),
+       st.floats(0, 5, allow_nan=False), st.integers(0, 1000),
+       st.integers(1, 1 << 16))
+@settings(**SET)
+def test_objective_monotone_in_dispatch_time(d1, d2, transfer_s, doorbells,
+                                             tokens):
+    """The tuner objective must strictly order by measured dispatch time
+    when everything else is equal — otherwise search tunes the wrong way."""
+    from repro.tune import Metrics, Objective
+    obj = Objective()
+    lo = Metrics(dispatch_s=min(d1, d2), transfer_s=transfer_s,
+                 doorbells=doorbells, tokens=tokens)
+    hi = Metrics(dispatch_s=max(d1, d2), transfer_s=transfer_s,
+                 doorbells=doorbells, tokens=tokens)
+    if d1 == d2:
+        assert obj.score(lo) == obj.score(hi)
+    else:
+        assert obj.score(lo) < obj.score(hi)
+
+
 @given(st.sampled_from(["f32", "bf16", "f16", "s8", "u32", "pred", "f64"]))
 @settings(**SET)
 def test_dtype_bytes_known(d):

@@ -52,6 +52,39 @@ def test_grad_compression_trains():
     assert np.isfinite(out["final_loss"])
 
 
+def test_server_truncated_final_block_accounting():
+    """Regression: T>1 with max_new not a multiple of T overcounted
+    ``produced`` and inflated new_tokens/tokens_per_doorbell."""
+    srv = Server(CFG, batch_size=2, max_seq=64, tokens_per_launch=4, seed=1)
+    reqs = [Request(i, np.arange(4, dtype=np.int32) + i, max_new_tokens=6)
+            for i in range(2)]
+    out = srv.serve(reqs)
+    # 1 prefill + ceil((6-1)/4)=2 decode launches
+    assert out["doorbells"] == 3
+    assert out["new_tokens"] == 12                 # sum of request budgets
+    assert out["tokens_per_doorbell"] == pytest.approx(4.0)
+    assert all(len(r.tokens) == 6 for r in reqs)
+
+
+def test_server_heterogeneous_budgets_sum_not_max():
+    """Regression: new_tokens used max_new * len(requests); must be the sum
+    of per-request budgets — the tuner objective reads these fields."""
+    srv = Server(CFG, batch_size=2, max_seq=64, tokens_per_launch=2, seed=1)
+    reqs = [Request(0, np.arange(4, dtype=np.int32), max_new_tokens=8),
+            Request(1, np.arange(4, dtype=np.int32) + 1, max_new_tokens=2)]
+    out = srv.serve(reqs)
+    assert out["new_tokens"] == 10                 # not 16
+    assert out["tokens_per_doorbell"] == pytest.approx(
+        10 / out["doorbells"])
+    assert len(reqs[0].tokens) == 8 and len(reqs[1].tokens) == 2
+
+
+def test_server_rejects_prompt_longer_than_max_seq():
+    srv = Server(CFG, batch_size=2, max_seq=16, tokens_per_launch=1, seed=1)
+    with pytest.raises(ValueError, match="max_seq"):
+        srv.serve([Request(0, np.zeros(17, np.int32))])
+
+
 def test_server_greedy_decode_and_doorbell_economy():
     srv1 = Server(CFG, batch_size=2, max_seq=64, tokens_per_launch=1, seed=1)
     srv4 = Server(CFG, batch_size=2, max_seq=64, tokens_per_launch=4, seed=1)

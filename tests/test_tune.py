@@ -1,0 +1,250 @@
+"""Submission-policy autotuner: objective, search, policy, auto-apply."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_ARCHS
+from repro.core import TraceSession
+from repro.core.dma import INLINE_THRESHOLD_DEFAULT, HybridMover
+from repro.tune import (Knob, Metrics, Objective, ObjectiveWeights, Policy,
+                        activate_policy, clear_active_policy,
+                        coordinate_descent, load_policy, load_policy_for,
+                        metrics_from_summary, parse_spec, parse_value,
+                        save_policy)
+from repro.tune.autotune import CandidateEvaluator, WorkloadSpec, default_knobs
+
+CFG = SMOKE_ARCHS["deepseek-7b"]
+
+
+# -- spec parsing (the hillclimb rsplit fix) -------------------------------
+
+def test_parse_value_types():
+    assert parse_value("True") is True
+    assert parse_value("False") is False
+    assert parse_value("7") == 7
+    assert parse_value("0.5") == 0.5
+    assert parse_value("abc") == "abc"
+
+
+def test_parse_spec_plain():
+    assert parse_spec("tag:123") == ("tag", 123)
+
+
+def test_parse_spec_key_with_colons():
+    """Regression: tags are op paths that may contain ':' — only the LAST
+    colon separates the value (split(':') used to shear the key apart)."""
+    key, val = parse_spec("jit(step)/fusion:attn:softmax:4.2e6")
+    assert key == "jit(step)/fusion:attn:softmax"
+    assert val == pytest.approx(4.2e6)
+
+
+def test_parse_spec_rejects_no_colon():
+    with pytest.raises(ValueError):
+        parse_spec("novalue")
+
+
+# -- search ----------------------------------------------------------------
+
+def test_coordinate_descent_finds_separable_minimum():
+    knobs = [Knob("a", (1, 2, 3, 4), default=1),
+             Knob("b", (0, 5, 10), default=0)]
+    res = coordinate_descent(lambda k: (k["a"] - 3) ** 2 + abs(k["b"] - 5),
+                             knobs)
+    assert res.best == {"a": 3, "b": 5}
+    assert res.best_score == 0.0
+    assert res.start_score > res.best_score
+    assert 0 < res.improvement <= 1
+
+
+def test_coordinate_descent_caches_evaluations():
+    calls = []
+
+    def ev(k):
+        calls.append(dict(k))
+        return k["a"]
+
+    res = coordinate_descent(ev, [Knob("a", (3, 2, 1))], max_rounds=4)
+    assert res.best == {"a": 1}
+    # each distinct assignment evaluated exactly once despite multiple rounds
+    assert len(calls) == len(res.trials) == 3
+
+
+def test_knob_requires_values():
+    with pytest.raises(ValueError):
+        Knob("empty", ())
+
+
+# -- objective -------------------------------------------------------------
+
+def test_metrics_from_summary_reads_session_accumulators():
+    with TraceSession(name="t") as sess:
+        sess.emit("dispatch", "d", dur_s=0.25)
+        sess.emit("dispatch", "d", dur_s=0.25)
+        sess.emit("transfer", "inline_put", dur_s=0.5, payload_bytes=2**30)
+        sess.emit("compile", "c", dur_s=1.0)
+        m = metrics_from_summary(sess.summary(), tokens=10)
+    assert m.dispatch_s == pytest.approx(0.5)
+    assert m.doorbells == 2
+    assert m.transfer_s == pytest.approx(0.5)
+    assert m.transfer_bytes == 2**30
+    assert m.compile_s == pytest.approx(1.0)
+    assert m.doorbells_per_token == pytest.approx(0.2)
+    assert m.transfer_bandwidth_gib_s == pytest.approx(2.0)
+
+
+def test_metrics_delta_excludes_warmup():
+    with TraceSession(name="t") as sess:
+        sess.emit("dispatch", "warm", dur_s=5.0)
+        before = sess.summary()
+        sess.emit("dispatch", "steady", dur_s=0.1)
+        m = metrics_from_summary(sess.summary(), before, tokens=1)
+    assert m.dispatch_s == pytest.approx(0.1)
+    assert m.doorbells == 1
+
+
+def test_objective_scores_per_token_and_compile_free():
+    obj = Objective(ObjectiveWeights(dispatch=1.0, transfer=1.0,
+                                     doorbell_cost_s=0.0))
+    m = Metrics(dispatch_s=1.0, transfer_s=0.5, compile_s=100.0, tokens=10)
+    assert obj.score(m) == pytest.approx(0.15)  # compile not charged
+
+
+def test_objective_weights_validated():
+    with pytest.raises(ValueError):
+        ObjectiveWeights(dispatch=0.0)
+    with pytest.raises(ValueError):
+        ObjectiveWeights(doorbell_cost_s=-1.0)
+
+
+# -- policy persistence + auto-apply ---------------------------------------
+
+def _mk_policy(**knobs):
+    return Policy(arch=CFG.name, platform="cpu", device_count=1,
+                  knobs=knobs, objective={"before": 2.0, "after": 1.0})
+
+
+def test_policy_roundtrip(tmp_path):
+    pol = _mk_policy(tokens_per_launch=4, dma_threshold_bytes=0)
+    path = save_policy(pol, str(tmp_path))
+    assert os.path.basename(path) == f"{CFG.name}__cpu__d1.json"
+    with open(path) as f:
+        assert json.load(f)["knobs"]["tokens_per_launch"] == 4
+    loaded = load_policy(CFG.name, "cpu", 1, str(tmp_path))
+    assert loaded == pol
+
+
+def test_load_policy_relaxed_device_count(tmp_path):
+    save_policy(_mk_policy(tokens_per_launch=2), str(tmp_path))
+    # same arch+platform, different device count -> still found
+    assert load_policy(CFG.name, "cpu", 8, str(tmp_path)).knobs[
+        "tokens_per_launch"] == 2
+    assert load_policy("other-arch", "cpu", 1, str(tmp_path)) is None
+
+
+def test_load_policy_disabled_by_env(tmp_path, monkeypatch):
+    save_policy(_mk_policy(tokens_per_launch=2), str(tmp_path))
+    monkeypatch.setenv("REPRO_POLICY_DISABLE", "1")
+    assert load_policy(CFG.name, "cpu", 1, str(tmp_path)) is None
+
+
+def test_server_auto_applies_persisted_policy():
+    # conftest points REPRO_POLICY_DIR at an empty per-test dir
+    from repro.runtime.server import Server
+    save_policy(_mk_policy(tokens_per_launch=3))
+    srv = Server(CFG, batch_size=2, max_seq=64)      # knob left unset
+    assert srv.T == 3
+    assert srv.policy is not None
+    explicit = Server(CFG, batch_size=2, max_seq=64, tokens_per_launch=1)
+    assert explicit.T == 1 and explicit.policy is None
+
+
+def test_trainer_auto_applies_persisted_policy():
+    from repro.configs.shapes import ShapeConfig
+    from repro.runtime.trainer import Trainer
+    save_policy(_mk_policy(steps_per_launch=2))
+    tr = Trainer(CFG, ShapeConfig("tiny", 32, 2, "train"))
+    assert tr.k == 2
+    out = tr.train(4)
+    assert out["steps"] == 4 and out["doorbells"] == 2
+
+
+def test_hybrid_mover_reads_active_policy_threshold():
+    pol = _mk_policy(dma_threshold_bytes=0)
+    activate_policy(pol)
+    try:
+        mover = HybridMover()                        # threshold unset
+        assert mover.threshold == 0
+        _, rec = mover.put(np.zeros(4, np.uint8))
+        assert rec.mode == "direct"
+    finally:
+        clear_active_policy()
+    assert HybridMover().threshold == INLINE_THRESHOLD_DEFAULT
+
+
+# -- end-to-end tune -------------------------------------------------------
+
+def test_default_knobs_cover_requested_workloads():
+    knobs = default_knobs(("dma", "serve", "train"))
+    assert [k.name for k in knobs] == [
+        "dma_threshold_bytes", "tokens_per_launch", "steps_per_launch"]
+    with pytest.raises(KeyError):
+        default_knobs(("nope",))
+
+
+def test_evaluator_rejects_unknown_workload():
+    with pytest.raises(ValueError):
+        CandidateEvaluator(CFG, workloads=("dma", "nope"))
+
+
+def test_evaluator_caches_per_workload_subkey():
+    ev = CandidateEvaluator(CFG, spec=WorkloadSpec(dma_repeats=1,
+                                                   dma_sizes=(64, 4096)),
+                            workloads=("dma",))
+    s1, info = ev({"dma_threshold_bytes": 1024})
+    assert "dma" in info and info["dma"]["tokens"] == 2
+    n_cached = len(ev._cache)
+    s2, _ = ev({"dma_threshold_bytes": 1024})
+    assert s2 == s1 and len(ev._cache) == n_cached
+
+
+@pytest.mark.slow
+def test_tune_cli_persists_policy_and_server_applies_it(tmp_path):
+    """The acceptance loop: tune -> policy JSON -> fresh process Server run
+    picks the knobs up, with before/after objective in the policy."""
+    env = dict(os.environ)
+    env["REPRO_POLICY_DIR"] = str(tmp_path)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.tune", "--arch", "gemma-2b",
+         "--workloads", "dma,serve", "--rounds", "1", "--new-tokens", "4",
+         "--max-seq", "32", "--no-verify"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    # keyed by cfg.name (what Server looks up), not the registry alias
+    name = SMOKE_ARCHS["gemma-2b"].name
+    path = os.path.join(str(tmp_path), f"{name}__cpu__d1.json")
+    assert os.path.exists(path)
+    with open(path) as f:
+        pol = json.load(f)
+    assert set(pol["knobs"]) == {"dma_threshold_bytes", "tokens_per_launch"}
+    assert pol["objective"]["after"] <= pol["objective"]["before"]
+    assert pol["objective"]["trials"]
+    # a separate process's Server auto-applies the persisted knobs
+    check = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent("""
+            from repro.configs import SMOKE_ARCHS
+            from repro.runtime.server import Server
+            srv = Server(SMOKE_ARCHS["gemma-2b"], batch_size=2, max_seq=32)
+            assert srv.policy is not None
+            print("applied", srv.T)
+        """)],
+        capture_output=True, text=True, timeout=300, env=env)
+    assert check.returncode == 0, check.stderr[-3000:]
+    assert check.stdout.startswith("applied "), check.stdout
+    assert int(check.stdout.split()[1]) == pol["knobs"]["tokens_per_launch"]
