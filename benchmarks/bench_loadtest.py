@@ -1,0 +1,51 @@
+"""Continuous-batching serve under replayed Poisson traffic.
+
+The paper's CUDA-Graphs case study says launch overhead dominates exactly
+where serving lives: many tiny decode submissions.  This section replays a
+seeded Poisson arrival schedule (mixed prompt/output lengths) through the
+:class:`~repro.runtime.server.ContinuousBatchingServer` at several
+``tokens_per_launch`` settings and reports per-request latency percentiles,
+token throughput, and tokens-per-doorbell — the serving-scale trajectory
+later PRs measure themselves against (``python -m repro.launch.loadtest``
+is the interactive version).
+
+Replay is synchronous (submit-then-drain) so rows are deterministic per
+seed; the realtime producer-thread path is exercised by the test suite.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core import TraceSession
+
+HEADER = ("mode,requests,completed,evicted,rejected,new_tokens,doorbells,"
+          "tok_per_doorbell,tok_per_s,p50_ms,p99_ms,ttft_p50_ms")
+
+
+def run(arch: str = "gemma-2b", quick: bool = False,
+        session: Optional[TraceSession] = None) -> List[str]:
+    from repro.configs import SMOKE_ARCHS
+    from repro.runtime.server import ContinuousBatchingServer
+    from repro.runtime.traffic import TrafficSpec, generate, replay
+
+    cfg = SMOKE_ARCHS[arch]
+    n = 8 if quick else 32
+    launches = (1, 4) if quick else (1, 4, 8)
+    spec = TrafficSpec(n_requests=n, rate=200.0, prompt_lens=(4, 8),
+                       new_tokens=(5, 9), seed=0)
+    rows: List[str] = []
+    for tpl in launches:
+        eng = ContinuousBatchingServer(
+            cfg, batch_size=4, max_seq=64, tokens_per_launch=tpl,
+            seed=0, session=session)
+        # warm replay compiles prefill/decode; the measured replay below is
+        # the steady-state serving regime a policy actually runs in
+        replay(eng, generate(spec, cfg.vocab_size), realtime=False)
+        _, m = replay(eng, generate(spec, cfg.vocab_size), realtime=False)
+        rows.append(
+            f"cb_T{tpl},{m['requests']},{m['completed']},{m['evicted']},"
+            f"{m['rejected']},{m['new_tokens']},{m['doorbells']},"
+            f"{m['tokens_per_doorbell']:.2f},{m['tokens_per_s']:.1f},"
+            f"{m['latency_p50_s'] * 1e3:.1f},{m['latency_p99_s'] * 1e3:.1f},"
+            f"{m['ttft_p50_s'] * 1e3:.1f}")
+    return rows

@@ -4,10 +4,11 @@
   bench_graphs     — Fig. 7/9/10 (graph launch scaling, footprint law)
   bench_submission — §6.2/§7 (stage decomposition, multi-step economy)
   bench_policy     — tuned-policy before/after (python -m repro.tune)
+  bench_loadtest   — continuous-batching serve under Poisson traffic
   bench_kernels    — per-kernel interpret-mode sanity timings
 
 Prints ``name,value...`` CSV blocks (unchanged), and additionally writes a
-machine-readable artifact (``--out``, default ``BENCH_6.json``) recording
+machine-readable artifact (``--out``, default ``BENCH_7.json``) recording
 section -> rows (typed by the section header), the unified TraceSession
 summary, and the active tuned policy with its before/after objective — one
 point of the ROADMAP's perf trajectory, regenerated per PR and diffable in
@@ -18,7 +19,7 @@ ambient session and passed explicitly where a section builds its own objects
 — so the final block is the unified, submission-ordered event summary across
 DMA, graph-launch, trainer, and policy benchmarks.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--out BENCH_6.json]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--out BENCH_7.json]
 """
 from __future__ import annotations
 
@@ -28,7 +29,7 @@ import sys
 import time
 from typing import Any, Dict, List
 
-PR_NUMBER = 6
+PR_NUMBER = 7
 
 
 def _parse_cell(v: str) -> Any:
@@ -91,7 +92,8 @@ def main() -> None:
     from repro.core import TraceSession
     from repro.tune.policy import load_policy
 
-    from . import bench_dma, bench_graphs, bench_policy, bench_submission
+    from . import (bench_dma, bench_graphs, bench_loadtest, bench_policy,
+                   bench_submission)
 
     sections: Dict[str, Dict[str, Any]] = {}
 
@@ -117,6 +119,10 @@ def main() -> None:
                  bench_policy.HEADER,
                  bench_policy.run(arch=args.arch, quick=args.quick,
                                   session=sess))
+        _section("loadtest", "Continuous-batching serve (Poisson replay)",
+                 bench_loadtest.HEADER,
+                 bench_loadtest.run(arch=args.arch, quick=args.quick,
+                                    session=sess))
         _section("kernels", "Kernel interpret-mode timings", "name,ms",
                  bench_kernels_rows())
     summary = sess.summary()

@@ -135,27 +135,35 @@ class JsonlSink:
     """Append-only JSONL file sink; one event per line.
 
     The file is opened lazily on first emit so constructing a session with a
-    ``jsonl_path`` is free until something is actually traced.
+    ``jsonl_path`` is free until something is actually traced.  The lazy open
+    and every write/flush/close run under one internal lock: a sink shared by
+    several sessions (or hit from a traffic-generator thread while the decode
+    loop emits) never double-opens the file or interleaves partial lines.
     """
 
     def __init__(self, path: str) -> None:
         self.path = str(path)
         self._fh: Optional[IO[str]] = None
+        self._lock = threading.Lock()
 
     def emit(self, event: TraceEvent) -> None:
-        if self._fh is None:
-            self._fh = open(self.path, "a")
-        self._fh.write(json.dumps(event.to_dict()) + "\n")
+        line = json.dumps(event.to_dict()) + "\n"
+        with self._lock:
+            if self._fh is None:
+                self._fh = open(self.path, "a")
+            self._fh.write(line)
 
     def flush(self) -> None:
-        if self._fh is not None:
-            self._fh.flush()
+        with self._lock:
+            if self._fh is not None:
+                self._fh.flush()
 
     def close(self) -> None:
-        if self._fh is not None:
-            self._fh.flush()
-            self._fh.close()
-            self._fh = None
+        with self._lock:
+            if self._fh is not None:
+                self._fh.flush()
+                self._fh.close()
+                self._fh = None
 
     @staticmethod
     def load(path: str) -> List[TraceEvent]:

@@ -1,7 +1,11 @@
 """Serving launcher: batched greedy decode with multi-token launches.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
-        [--tokens-per-launch 4] [--batch 4] [--new-tokens 16]
+        [--tokens-per-launch 4] [--batch 4] [--new-tokens 16] [--continuous]
+
+``--continuous`` serves the same requests through the continuous-batching
+engine (queued admission, per-request KV slots) instead of one static
+batch; ``python -m repro.launch.loadtest`` is the full traffic harness.
 """
 from __future__ import annotations
 
@@ -10,7 +14,7 @@ import argparse
 import numpy as np
 
 from ..configs import ARCHS, SMOKE_ARCHS
-from ..runtime.server import Request, Server
+from ..runtime.server import ContinuousBatchingServer, Request, Server
 from ..tune.policy import load_policy_for
 
 
@@ -25,6 +29,10 @@ def main() -> None:
     ap.add_argument("--tokens-per-launch", type=int, default=None,
                     help="unset -> auto-apply the tuned policy "
                          "(python -m repro.tune), else 4")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the continuous-batching engine")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="request count for --continuous (default: batch)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -32,17 +40,24 @@ def main() -> None:
     tpl = args.tokens_per_launch
     if tpl is None and load_policy_for(cfg, activate=False) is None:
         tpl = 4                      # legacy CLI default when untuned
-    srv = Server(cfg, batch_size=args.batch, max_seq=args.max_seq,
-                 tokens_per_launch=tpl, seed=args.seed)
+    cls = ContinuousBatchingServer if args.continuous else Server
+    srv = cls(cfg, batch_size=args.batch, max_seq=args.max_seq,
+              tokens_per_launch=tpl, seed=args.seed)
     if srv.policy is not None:
         print(f"policy: {srv.policy.arch} knobs={srv.policy.knobs} "
               f"objective={srv.policy.objective.get('after')}")
     rng = np.random.default_rng(args.seed)
+    n = (args.requests or args.batch) if args.continuous else args.batch
     reqs = [Request(i, rng.integers(0, cfg.vocab_size,
                                     size=args.prompt_len).astype(np.int32),
                     max_new_tokens=args.new_tokens)
-            for i in range(args.batch)]
-    out = srv.serve(reqs)
+            for i in range(n)]
+    if args.continuous:
+        for r in reqs:
+            srv.submit(r)
+        out = srv.run()
+    else:
+        out = srv.serve(reqs)
     print(out)
     for r in reqs[:2]:
         print(f"req {r.uid}: {r.tokens}")

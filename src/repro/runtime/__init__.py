@@ -1,4 +1,6 @@
 from .trainer import Trainer
-from .server import Request, Server
+from .scheduler import AdmissionQueue, RequestTicket
+from .server import ContinuousBatchingServer, Request, Server
 
-__all__ = ["Trainer", "Server", "Request"]
+__all__ = ["Trainer", "Server", "Request", "ContinuousBatchingServer",
+           "AdmissionQueue", "RequestTicket"]

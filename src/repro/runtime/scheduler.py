@@ -1,0 +1,184 @@
+"""Request scheduling for the continuous-batching server.
+
+The decode loop is the paper's pathological small-submission regime; what a
+production engine adds around it is *membership churn*: requests arrive on
+their own clock (a traffic thread), wait in a bounded admission queue, get a
+KV slot when one frees up, and leave (or are evicted) mid-stream while the
+rest of the batch keeps decoding.  This module holds the bookkeeping side of
+that — tickets, the admission queue, eviction policies, and the percentile
+helpers the load harness reports with — with no JAX dependency, so it is
+unit-testable without compiling anything.
+
+Lifecycle of a :class:`RequestTicket`::
+
+    queued --admit--> active --finish--> done
+       |                 |
+       | (queue full,    | (KV budget would overrun max_seq)
+       |  drop_oldest)   v
+       +--------------> evicted
+       | (queue full, reject / prompt too long)
+       v
+    rejected
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+import collections
+
+__all__ = ["RequestTicket", "AdmissionQueue", "percentile", "latency_stats"]
+
+#: terminal ticket states
+FINISHED = ("done", "evicted", "rejected")
+
+
+@dataclasses.dataclass
+class RequestTicket:
+    """One request's journey through the engine, with timing for metrics.
+
+    Timestamps are ``perf_counter`` readings; ``-1.0`` means "never
+    happened".  ``cap`` is the KV-capacity token budget computed at admission
+    (``max_seq - len(prompt) + 1``): a request asking for more is truncated
+    there and finishes as ``evicted``.
+    """
+
+    request: Any                     # runtime.server.Request
+    status: str = "queued"           # queued|active|done|evicted|rejected
+    reason: str = ""                 # why evicted/rejected
+    slot: int = -1
+    cap: int = 0
+    t_submit: float = -1.0
+    t_admit: float = -1.0
+    t_first: float = -1.0            # first token harvested
+    t_done: float = -1.0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def uid(self) -> int:
+        return self.request.uid
+
+    @property
+    def finished(self) -> bool:
+        return self.status in FINISHED
+
+    @property
+    def latency_s(self) -> float:
+        """Submit -> terminal state (includes queue wait)."""
+        if self.t_done < 0 or self.t_submit < 0:
+            return -1.0
+        return self.t_done - self.t_submit
+
+    @property
+    def ttft_s(self) -> float:
+        """Submit -> first harvested token."""
+        if self.t_first < 0 or self.t_submit < 0:
+            return -1.0
+        return self.t_first - self.t_submit
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "uid": self.uid, "status": self.status, "reason": self.reason,
+            "prompt_len": int(len(self.request.prompt)),
+            "max_new_tokens": int(self.request.max_new_tokens),
+            "n_tokens": len(self.tokens),
+            "latency_s": self.latency_s, "ttft_s": self.ttft_s,
+        }
+
+
+class AdmissionQueue:
+    """Bounded, thread-safe FIFO of queued tickets.
+
+    ``policy`` decides what happens when the queue is full:
+
+    * ``"reject"`` — the *incoming* ticket is refused (callers mark it
+      ``rejected``); the queue is untouched.
+    * ``"drop_oldest"`` — the oldest *queued* ticket is evicted to make
+      room (callers mark it ``evicted``); the incoming one is accepted.
+
+    ``close()`` marks end-of-intake: further submits are refused and the
+    engine's drain loop knows no more work is coming.
+    """
+
+    POLICIES = ("reject", "drop_oldest")
+
+    def __init__(self, max_pending: int = 256,
+                 policy: str = "reject") -> None:
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown admission policy {policy!r}; "
+                             f"expected one of {self.POLICIES}")
+        self.max_pending = int(max_pending)
+        self.policy = policy
+        self._q: Deque[RequestTicket] = collections.deque()
+        self._lock = threading.Lock()
+        self._closed = False
+        self.n_submitted = 0
+        self.n_refused = 0
+        self.n_dropped = 0
+
+    def submit(self, ticket: RequestTicket
+               ) -> Tuple[bool, Optional[RequestTicket]]:
+        """Try to enqueue; returns ``(accepted, dropped_ticket)``.
+
+        ``dropped_ticket`` is the queued ticket evicted under
+        ``drop_oldest`` (None otherwise).  The caller owns status updates
+        for both tickets — the queue only moves them.
+        """
+        with self._lock:
+            if self._closed:
+                self.n_refused += 1
+                return False, None
+            dropped = None
+            if len(self._q) >= self.max_pending:
+                if self.policy == "reject":
+                    self.n_refused += 1
+                    return False, None
+                dropped = self._q.popleft()
+                self.n_dropped += 1
+            self._q.append(ticket)
+            self.n_submitted += 1
+            return True, dropped
+
+    def pop(self) -> Optional[RequestTicket]:
+        with self._lock:
+            return self._q.popleft() if self._q else None
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return self._closed
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._q)
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    """Linear-interpolated percentile (numpy-free so it runs anywhere)."""
+    vals = sorted(x for x in xs if x >= 0.0)
+    if not vals:
+        return 0.0
+    if len(vals) == 1:
+        return float(vals[0])
+    rank = (p / 100.0) * (len(vals) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(vals) - 1)
+    frac = rank - lo
+    return float(vals[lo] * (1.0 - frac) + vals[hi] * frac)
+
+
+def latency_stats(tickets: Sequence[RequestTicket]) -> Dict[str, float]:
+    """p50/p99 latency and time-to-first-token over terminal tickets."""
+    lats = [t.latency_s for t in tickets if t.t_done >= 0]
+    ttfts = [t.ttft_s for t in tickets if t.t_first >= 0]
+    return {
+        "latency_p50_s": percentile(lats, 50.0),
+        "latency_p99_s": percentile(lats, 99.0),
+        "ttft_p50_s": percentile(ttfts, 50.0),
+        "ttft_p99_s": percentile(ttfts, 99.0),
+    }

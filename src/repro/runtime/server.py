@@ -4,12 +4,27 @@ Decode is the pathological small-submission regime the paper's DMA study
 targets: one token of useful work per dispatch.  The server therefore
 exposes ``tokens_per_launch`` (multi-token graph launch — scan T decode
 steps into one dispatch) and tracks doorbells so the benefit is measurable.
+
+Two serving surfaces share one model/params/session:
+
+* :class:`Server.serve` — one-shot: a static batch decodes to completion.
+* :class:`ContinuousBatchingServer` — a request queue with admission
+  control and eviction, per-request KV slots, and a decode loop that new
+  requests *join while it runs* (and leave mid-stream) without ever
+  recompiling the graph-launched multi-token decode.
+
+The continuous engine keeps one decode state **per slot** (each slot is a
+full batch-1 state pytree, stacked on a fresh leading axis and driven by a
+``jax.vmap`` over slots).  Each slot therefore carries its own cache length
+and its own greedy chain — a request's tokens are *independent of batch
+composition and join time*, which is what makes continuous-batching output
+exactly equal to a one-shot ``serve()`` of the same request.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,8 +33,9 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.session import TraceSession
 from ..models import get_model
+from .scheduler import AdmissionQueue, RequestTicket, latency_stats
 
-__all__ = ["Server", "Request"]
+__all__ = ["Server", "Request", "ContinuousBatchingServer"]
 
 
 @dataclasses.dataclass
@@ -28,6 +44,11 @@ class Request:
     prompt: np.ndarray          # [S] int32
     max_new_tokens: int = 16
     tokens: Optional[List[int]] = None
+
+
+def _empty_metrics() -> Dict[str, Any]:
+    return {"wall_s": 0.0, "doorbells": 0, "new_tokens": 0,
+            "tokens_per_doorbell": 0.0, "trace_events": 0}
 
 
 class Server:
@@ -77,9 +98,31 @@ class Server:
             self._decode_T = self.tracker.wrap(jax.jit(decode_T),
                                                "decode_T_steps")
 
+    def _decode_block(self, state, nxt, want: int
+                      ) -> Tuple[Any, List[jax.Array], jax.Array]:
+        """One multi-token graph launch; keep only ``want`` tokens.
+
+        The launch always scans ``self.T`` steps; when ``want < T`` the
+        block is truncated and only the prefix is useful output.  Returns
+        ``(state, tokens, continuation)`` where ``continuation`` is the
+        last *kept* token (``tok_block[take - 1]``, not ``tok_block[-1]``
+        — a truncated block's final token is past the useful prefix, so a
+        re-entered decode loop must not continue from it).
+        """
+        state, tok_block = self._decode_T(self.params, state, nxt)
+        take = min(self.T, want)
+        toks = [tok_block[t] for t in range(take)]
+        nxt = tok_block[take - 1][:, None].astype(jnp.int32)
+        return state, toks, nxt
+
     def serve(self, requests: List[Request]) -> Dict[str, Any]:
         """Greedy-decode a batch of requests (padded to server batch)."""
-        assert len(requests) <= self.B
+        if not requests:
+            return _empty_metrics()
+        if len(requests) > self.B:
+            raise ValueError(
+                f"got {len(requests)} requests for batch_size={self.B}; "
+                f"use ContinuousBatchingServer for queued admission")
         for r in requests:
             if len(r.prompt) > self.max_seq:
                 raise ValueError(
@@ -105,14 +148,10 @@ class Server:
                 out.append(nxt[:, 0])
                 produced += 1
             else:
-                state, tok_block = self._decode_T(self.params, state, nxt)
-                # the launch always scans T steps, but only the un-truncated
-                # prefix is useful output — account for exactly that many
-                take = min(self.T, max_new - produced)
-                for t in range(take):
-                    out.append(tok_block[t])
-                nxt = tok_block[-1][:, None].astype(jnp.int32)
-                produced += take
+                state, block, nxt = self._decode_block(
+                    state, nxt, max_new - produced)
+                out.extend(block)
+                produced += len(block)
         jax.block_until_ready(out[-1])
         wall = time.perf_counter() - t0
         tokens = np.stack([np.asarray(t) for t in out], axis=1)  # [B, new]
@@ -130,3 +169,221 @@ class Server:
             "tokens_per_doorbell": new_tokens / max(1, doorbells),
             "trace_events": self.session.n_events - ev0,
         }
+
+
+class ContinuousBatchingServer(Server):
+    """Continuous-batching inference engine on top of :class:`Server`.
+
+    Requests are :meth:`submit`-ted (thread-safe — a traffic-generator
+    thread can feed a running decode loop) into a bounded
+    :class:`~repro.runtime.scheduler.AdmissionQueue`; :meth:`run` drives
+    the decode loop, admitting queued requests into free KV slots *between
+    decode launches* so the jitted, graph-launched ``tokens_per_launch``
+    decode never changes shape (and never recompiles) across join/leave
+    boundaries.
+
+    Per-request state: slot ``i`` holds a complete batch-1 decode-state
+    pytree (own KV cache, own cache ``length``); the engine stacks all
+    ``batch_size`` slot states on a new leading axis and decodes them with
+    one ``vmap``-ed launch.  Prefill runs per admitted request at its exact
+    prompt length (compiled once per distinct length), so a request's
+    greedy chain is bit-identical to ``Server.serve([request])`` no matter
+    when it joined or who shared the batch.
+
+    Lifecycle events land on the session timeline as ``progress`` events
+    (``serve.submit/admit/finish/evict/reject``); a finish event carries
+    the emitted tokens as its payload (4 bytes each), so token throughput
+    is recoverable from session accounting alone.
+    """
+
+    def __init__(self, cfg: ModelConfig, batch_size: int, max_seq: int,
+                 tokens_per_launch: Optional[int] = None, seed: int = 0,
+                 session: Optional[TraceSession] = None,
+                 max_pending: int = 256,
+                 admission: str = "reject") -> None:
+        super().__init__(cfg, batch_size, max_seq,
+                         tokens_per_launch=tokens_per_launch, seed=seed,
+                         session=session)
+        self.queue = AdmissionQueue(max_pending=max_pending, policy=admission)
+        self.tickets: List[RequestTicket] = []      # submit order, all fates
+        self._slot_tix: List[Optional[RequestTicket]] = [None] * self.B
+
+        # Stacked per-slot decode state: leading axis = slot.  Every slot —
+        # free or active — always holds a well-formed batch-1 state, so the
+        # vmapped launch below is total and shape-stable forever.
+        one = self.model.init_decode_state(1, max_seq)
+        self._slots = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * self.B), one)
+        self._nxt = jnp.zeros((self.B, 1, 1), jnp.int32)
+
+        def decode_slot(params, state, tok):        # state: batch-1 pytree
+            def body(carry, _):
+                st, t = carry
+                st, logits = self.model.decode_step(params, st, t)
+                nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(t.dtype)
+                return (st, nxt), nxt[0, 0]
+            (state, nxt), toks = jax.lax.scan(
+                body, (state, tok), None, length=self.T)
+            return state, toks, nxt                 # [T], [1, 1]
+
+        self._decode_slots = self.tracker.wrap(
+            jax.jit(jax.vmap(decode_slot, in_axes=(None, 0, 0))),
+            "decode_slots")
+        # scatter one admitted request's prefilled state into its slot
+        self._install = jax.jit(
+            lambda full, part, i: jax.tree_util.tree_map(
+                lambda f, o: jax.lax.dynamic_update_index_in_dim(f, o, i, 0),
+                full, part))
+
+    # -- intake (any thread) ----------------------------------------------
+    def submit(self, request: Request) -> RequestTicket:
+        """Enqueue a request; returns its ticket (possibly already
+        ``rejected`` — admission control, not an exception, because the
+        traffic thread must keep running)."""
+        tix = RequestTicket(request=request, t_submit=time.perf_counter())
+        if len(request.prompt) > self.max_seq:
+            tix.status, tix.reason = "rejected", "prompt_exceeds_max_seq"
+            tix.t_done = tix.t_submit
+        else:
+            accepted, dropped = self.queue.submit(tix)
+            if dropped is not None:
+                dropped.status, dropped.reason = "evicted", "queue_overflow"
+                dropped.t_done = time.perf_counter()
+                self.session.emit("progress", "serve.evict",
+                                  uid=dropped.uid, reason=dropped.reason)
+            if not accepted:
+                tix.status = "rejected"
+                tix.reason = ("intake_closed" if self.queue.closed
+                              else "queue_full")
+                tix.t_done = time.perf_counter()
+        self.tickets.append(tix)
+        name = "serve.submit" if not tix.finished else "serve.reject"
+        self.session.emit("progress", name, uid=tix.uid, status=tix.status,
+                          reason=tix.reason)
+        return tix
+
+    def close_intake(self) -> None:
+        """No more submits: :meth:`run` may exit once everything drains."""
+        self.queue.close()
+
+    # -- scheduling (decode-loop thread) -----------------------------------
+    def _free_slots(self) -> List[int]:
+        return [i for i, t in enumerate(self._slot_tix) if t is None]
+
+    @property
+    def n_active(self) -> int:
+        return sum(1 for t in self._slot_tix if t is not None)
+
+    def _admit(self) -> int:
+        """Move queued tickets into free slots (prefill + install)."""
+        admitted = 0
+        for slot in self._free_slots():
+            tix = self.queue.pop()
+            if tix is None:
+                break
+            r = tix.request
+            state, logits = self._prefill(
+                self.params, jnp.asarray(np.asarray(r.prompt)[None, :]))
+            tok0 = int(jnp.argmax(logits[0, -1, :]))
+            self._slots = self._install(self._slots, state, np.int32(slot))
+            self._nxt = self._nxt.at[slot, 0, 0].set(tok0)
+            tix.tokens.append(tok0)
+            tix.status, tix.slot = "active", slot
+            tix.t_admit = tix.t_first = time.perf_counter()
+            # KV capacity: decode token j (0-based; token 0 comes straight
+            # from prefill logits) writes cache position prompt_len + j - 1,
+            # which must stay below max_seq.
+            tix.cap = self.max_seq - len(r.prompt) + 1
+            self._slot_tix[slot] = tix
+            self.session.emit("progress", "serve.admit", uid=tix.uid,
+                              slot=slot, queued_s=tix.t_admit - tix.t_submit)
+            admitted += 1
+            if len(tix.tokens) >= min(r.max_new_tokens, tix.cap):
+                self._finish(tix)       # degenerate 1-token request
+        return admitted
+
+    def _finish(self, tix: RequestTicket) -> None:
+        evicted = len(tix.tokens) < tix.request.max_new_tokens
+        tix.status = "evicted" if evicted else "done"
+        if evicted:
+            tix.reason = "kv_overrun"
+        tix.t_done = time.perf_counter()
+        tix.request.tokens = list(tix.tokens)
+        self._slot_tix[tix.slot] = None
+        self.session.emit(
+            "progress", "serve.evict" if evicted else "serve.finish",
+            payload_bytes=4 * len(tix.tokens), uid=tix.uid, slot=tix.slot,
+            tokens=len(tix.tokens), latency_s=tix.latency_s,
+            **({"reason": tix.reason} if evicted else {}))
+
+    def step(self) -> bool:
+        """One scheduler iteration: admit, then one decode launch across
+        all slots; harvest per-slot tokens.  Returns False if idle."""
+        self._admit()
+        if self.n_active == 0:
+            return False
+        self._slots, toks, self._nxt = self._decode_slots(
+            self.params, self._slots, self._nxt)
+        blocks = np.asarray(toks)                   # [B, T] host sync
+        for slot, tix in enumerate(self._slot_tix):
+            if tix is None:
+                continue
+            budget = min(tix.request.max_new_tokens, tix.cap)
+            take = min(self.T, budget - len(tix.tokens))
+            tix.tokens.extend(int(t) for t in blocks[slot, :take])
+            if len(tix.tokens) >= budget:
+                self._finish(tix)
+        return True
+
+    def run(self, idle_timeout_s: float = 5.0,
+            poll_s: float = 0.0005) -> Dict[str, Any]:
+        """Drive the decode loop until all work drains.
+
+        Exits when no request is queued or active AND either the intake is
+        closed (threaded replay calls :meth:`close_intake` when the
+        producer finishes) or nothing has arrived for ``idle_timeout_s``
+        (synchronous submit-then-run callers never close the intake).
+        Returns run metrics; per-request detail lives on the tickets.
+        """
+        t0 = time.perf_counter()
+        db0, ev0 = self.tracker.count, self.session.n_events
+        # snapshot: the tickets list grows from the traffic thread mid-run
+        done0 = sum(1 for t in list(self.tickets) if t.t_done >= 0)
+        tok0 = sum(len(t.tokens) for t in list(self.tickets))
+        idle_since: Optional[float] = None
+        while True:
+            if self.step():
+                idle_since = None
+                continue
+            if len(self.queue) == 0:
+                if self.queue.closed:
+                    break
+                now = time.perf_counter()
+                idle_since = idle_since if idle_since is not None else now
+                if now - idle_since >= idle_timeout_s:
+                    break
+            time.sleep(poll_s)
+        wall = time.perf_counter() - t0
+        tickets = list(self.tickets)
+        ended = [t for t in tickets if t.t_done >= t0]
+        by_status = {s: sum(1 for t in ended if t.status == s)
+                     for s in ("done", "evicted", "rejected")}
+        new_tokens = sum(len(t.tokens) for t in tickets) - tok0
+        doorbells = self.tracker.count - db0
+        out = {
+            "wall_s": wall,
+            "requests": sum(1 for t in tickets if t.t_done >= 0) - done0,
+            "completed": by_status["done"],
+            "evicted": by_status["evicted"],
+            "rejected": by_status["rejected"],
+            "new_tokens": int(new_tokens),
+            "doorbells": doorbells,
+            "tokens_per_doorbell": new_tokens / max(1, doorbells),
+            "tokens_per_s": new_tokens / max(wall, 1e-9),
+            "trace_events": self.session.n_events - ev0,
+        }
+        # latency percentiles over requests that actually decoded; instant
+        # rejections would skew p50 toward zero
+        out.update(latency_stats(
+            [t for t in ended if t.status in ("done", "evicted")]))
+        return out

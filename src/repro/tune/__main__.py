@@ -28,6 +28,10 @@ def main(argv=None) -> None:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--serve-mode", default="oneshot",
+                    choices=("oneshot", "continuous"),
+                    help="measure tokens_per_launch on a one-shot batch or "
+                         "under the continuous-batching engine")
     ap.add_argument("--train-steps", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     # environment preset (applied before first JAX init)
@@ -47,7 +51,7 @@ def main(argv=None) -> None:
     from .autotune import WorkloadSpec, tune
     spec = WorkloadSpec(batch=args.batch, new_tokens=args.new_tokens,
                         max_seq=args.max_seq, train_steps=args.train_steps,
-                        seed=args.seed)
+                        serve_mode=args.serve_mode, seed=args.seed)
     workloads = tuple(w for w in args.workloads.split(",") if w)
     policy, result, path = tune(
         args.arch, smoke=not args.full, rounds=args.rounds,

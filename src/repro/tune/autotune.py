@@ -45,11 +45,16 @@ KNOB_WORKLOADS: Dict[str, Tuple[str, ...]] = {
 class WorkloadSpec:
     """Sizes of the measurement workloads (smoke-scale by default)."""
 
-    # serve
+    # serve; ``serve_mode="continuous"`` measures the knob under the
+    # continuous-batching engine (queued Poisson traffic, per-slot decode)
+    # instead of a static one-shot batch — the regime a serving policy
+    # actually runs in.
     batch: int = 2
     prompt_len: int = 4
     new_tokens: int = 8
     max_seq: int = 64
+    serve_mode: str = "oneshot"   # oneshot | continuous
+    serve_requests: int = 6       # continuous mode: requests per measurement
     # train
     train_batch: int = 2
     train_seq: int = 32
@@ -120,6 +125,8 @@ class CandidateEvaluator:
         return m
 
     def _measure_serve(self, knobs: Dict[str, Any]) -> Metrics:
+        if self.spec.serve_mode == "continuous":
+            return self._measure_serve_continuous(knobs)
         from ..core.session import TraceSession
         from ..runtime.server import Request, Server
         spec = self.spec
@@ -140,6 +147,32 @@ class CandidateEvaluator:
             srv.serve(requests())                  # warm: compile + dispatch
             before = sess.summary()
             out = srv.serve(requests())
+            m = metrics_from_summary(sess.summary(), before,
+                                     tokens=out["new_tokens"])
+        return m
+
+    def _measure_serve_continuous(self, knobs: Dict[str, Any]) -> Metrics:
+        """Score ``tokens_per_launch`` under continuous batching: seeded
+        Poisson traffic drained synchronously (deterministic scheduling),
+        steady-state summary delta after one warm-up replay."""
+        from ..core.session import TraceSession
+        from ..runtime.server import ContinuousBatchingServer
+        from ..runtime.traffic import TrafficSpec, generate, replay
+        spec = self.spec
+        tspec = TrafficSpec(n_requests=spec.serve_requests, rate=1000.0,
+                            prompt_lens=(spec.prompt_len,),
+                            new_tokens=(spec.new_tokens,), seed=spec.seed)
+        with TraceSession(name="tune_serve_cb") as sess:
+            eng = ContinuousBatchingServer(
+                self.cfg, batch_size=spec.batch, max_seq=spec.max_seq,
+                tokens_per_launch=knobs["tokens_per_launch"],
+                seed=spec.seed, session=sess)
+            # warm: compiles prefill (per prompt length) + the slot decode
+            replay(eng, generate(tspec, self.cfg.vocab_size),
+                   realtime=False)
+            before = sess.summary()
+            _, out = replay(eng, generate(tspec, self.cfg.vocab_size),
+                            realtime=False)
             m = metrics_from_summary(sess.summary(), before,
                                      tokens=out["new_tokens"])
         return m

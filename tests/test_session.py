@@ -237,3 +237,62 @@ def test_report_interleaves_all_kinds_in_submission_order():
     assert [l.split()[2] for l in event_lines] == \
         ["compile", "dispatch", "transfer"]
     assert "TRACE SESSION rep" in text
+
+
+# -- thread safety ----------------------------------------------------------
+
+def test_emit_thread_safe_seq_and_jsonl(tmp_path):
+    """A traffic thread and a decode loop share one session: sequence
+    numbers stay unique/contiguous and the lazily-opened JSONL sink never
+    double-opens or interleaves lines."""
+    import threading
+
+    path = tmp_path / "threads.jsonl"
+    n_threads, per_thread = 8, 50
+    with TraceSession("mt", jsonl_path=str(path)) as sess:
+        barrier = threading.Barrier(n_threads)
+
+        def worker(tid):
+            barrier.wait()      # maximize interleaving incl. the lazy open
+            for i in range(per_thread):
+                sess.emit("progress", f"w{tid}", payload_bytes=1)
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    total = n_threads * per_thread
+    assert sess.n_events == total
+    seqs = [e.seq for e in sess.timeline()]
+    assert seqs == list(range(total))               # unique AND contiguous
+    loaded = JsonlSink.load(str(path))              # every line parses
+    assert len(loaded) == total
+    assert sorted(e.seq for e in loaded) == list(range(total))
+    s = sess.summary()
+    assert s["by_kind"]["progress"] == total
+    assert s["total_payload_bytes"] == total
+
+
+def test_jsonl_sink_shared_across_sessions_single_file_handle(tmp_path):
+    """One sink instance fed by two sessions concurrently stays consistent."""
+    import threading
+
+    path = tmp_path / "shared.jsonl"
+    sink = JsonlSink(str(path))
+    a = TraceSession("a", sinks=[sink])
+    b = TraceSession("b", sinks=[sink])
+
+    def pump(sess):
+        for _ in range(100):
+            sess.emit("dispatch", "x")
+
+    ts = [threading.Thread(target=pump, args=(s,)) for s in (a, b)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    sink.close()
+    assert len(JsonlSink.load(str(path))) == 200
