@@ -8,18 +8,19 @@
   bench_kernels    — per-kernel interpret-mode sanity timings
 
 Prints ``name,value...`` CSV blocks (unchanged), and additionally writes a
-machine-readable artifact (``--out``, default ``BENCH_7.json``) recording
+machine-readable artifact (``--out``, default ``BENCH_8.json``) recording
 section -> rows (typed by the section header), the unified TraceSession
 summary, and the active tuned policy with its before/after objective — one
-point of the ROADMAP's perf trajectory, regenerated per PR and diffable in
-CI.  ``--quick`` shrinks every sweep to CI scale.
+point of the ROADMAP's perf trajectory, regenerated per PR and gated in CI
+by ``python -m repro.obs.trajectory`` against the newest committed
+``BENCH_*.json``.  ``--quick`` shrinks every sweep to CI scale.
 
 ONE :class:`repro.core.TraceSession` spans every section — installed as the
 ambient session and passed explicitly where a section builds its own objects
 — so the final block is the unified, submission-ordered event summary across
 DMA, graph-launch, trainer, and policy benchmarks.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--out BENCH_7.json]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--out BENCH_8.json]
 """
 from __future__ import annotations
 
@@ -29,7 +30,7 @@ import sys
 import time
 from typing import Any, Dict, List
 
-PR_NUMBER = 7
+PR_NUMBER = 8
 
 
 def _parse_cell(v: str) -> Any:
@@ -126,6 +127,7 @@ def main() -> None:
         _section("kernels", "Kernel interpret-mode timings", "name,ms",
                  bench_kernels_rows())
     summary = sess.summary()
+    sink_stats = sess.sink_stats()
     print("# === Unified trace session ===")
     print(json.dumps(summary, indent=2, sort_keys=True))
 
@@ -140,6 +142,7 @@ def main() -> None:
             "arch": args.arch,
             "sections": sections,
             "session_summary": summary,
+            "sink_stats": sink_stats,
             "policy": pol.to_dict() if pol is not None else None,
             "tuning": ({"before": pol.objective.get("before"),
                         "after": pol.objective.get("after"),

@@ -8,11 +8,17 @@ subsystem made it.
 2. §6.2 analogue: inline vs direct data movement (``transfer``).
 3. §6.3 analogue: the command-footprint law (``graph_launch``/``dispatch``).
 4. The merged timeline: all of the above interleaved in submission order.
+5. Fleet-wide capture: two *separate processes*, each with its own tagged
+   session and its own monotonic clock, merged by ``repro.obs.aggregate``
+   into one cross-process submission-ordered timeline (barrier-aligned).
 
     PYTHONPATH=src python examples/command_stream_tour.py
 """
 import os
+import socket
 import sys
+import tempfile
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -76,9 +82,55 @@ def tour_4_timeline(sess: TraceSession) -> None:
     print(sess.report(max_events=24))
 
 
+def _fleet_worker(start_barrier, outdir: str, pid: int) -> None:
+    """One simulated fleet process: tagged session, own clock, own shard."""
+    from repro.core import TraceSession
+
+    time.sleep(0.03 * pid)                 # deliberately skew session t0
+    path = os.path.join(outdir, f"trace.p{pid}.jsonl")
+    with TraceSession(f"fleet_proc{pid}", jsonl_path=path,
+                      tags={"host": socket.gethostname(),
+                            "process": pid}) as sess:
+        start_barrier.wait()               # the shared real-world moment
+        sess.barrier("fleet.sync")         # -> obs.barrier alignment event
+        for step in range(3):
+            sess.emit("dispatch", f"decode_step{step}",
+                      dur_s=1e-4 * (pid + 1), payload_bytes=512)
+            time.sleep(0.01)
+        sess.emit("transfer", "kv_pull", dur_s=2e-4,
+                  payload_bytes=1 << 16, mode="direct")
+
+
+def tour_5_fleet() -> None:
+    print("\n" + "=" * 72)
+    print("5. Fleet-wide aggregation (two processes, one merged timeline)")
+    print("=" * 72)
+    import multiprocessing as mp
+
+    from repro.obs import aggregate
+
+    ctx = mp.get_context("spawn")
+    outdir = tempfile.mkdtemp(prefix="fleet_tour_")
+    start = ctx.Barrier(2)
+    procs = [ctx.Process(target=_fleet_worker, args=(start, outdir, pid))
+             for pid in (0, 1)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join()
+    merged = aggregate(sorted(
+        os.path.join(outdir, f) for f in os.listdir(outdir)))
+    print(merged.report(max_events=16))
+    for shard, al in merged.summary()["alignment"].items():
+        print(f"  shard {shard}: offset={al['offset_s']*1e3:+.3f} ms "
+              f"via {al['mode']}")
+    print("  -> per-process clocks re-based onto one submission order")
+
+
 if __name__ == "__main__":
     with TraceSession("command_stream_tour") as sess:
         tour_1_listing(sess)
         tour_2_dma(sess)
         tour_3_graphs(sess)
     tour_4_timeline(sess)
+    tour_5_fleet()

@@ -18,11 +18,20 @@ active (and stays silent outside it — legacy standalone behaviour is
 unchanged).  Explicit injection (``DoorbellTracker(session=sess)``) is still
 supported and wins over the ambient session.
 
-Events flow to pluggable sinks.  Two are built in:
+Events flow to pluggable sinks.  The sink protocol is deliberately small —
+``emit(event)`` is required; ``flush()``, ``close()``, and ``stats()`` are
+optional (see :class:`Sink`).  Two sinks are built in:
 
 * :class:`RingBufferSink` — bounded in-memory ring (always installed; backs
   :meth:`TraceSession.timeline`);
 * :class:`JsonlSink` — append-only JSONL file for offline analysis.
+
+:mod:`repro.obs` layers production sinks on the same protocol
+(:class:`~repro.obs.AsyncSink`, :class:`~repro.obs.SamplingSink`,
+:class:`~repro.obs.LiveSummary`) plus fleet-wide shard aggregation; sessions
+there are *tagged* (``tags={"host": ..., "process": ...}``) so every event's
+``meta`` carries its origin and per-process JSONL shards can be merged into
+one cross-host submission-ordered timeline.
 
 :meth:`TraceSession.report` renders the Listing-1-style interleaved timeline;
 :meth:`TraceSession.summary` gives JSON-serializable per-kind accounting.
@@ -39,7 +48,9 @@ from typing import Any, Callable, Dict, IO, Iterable, Iterator, List, Optional
 
 __all__ = [
     "EVENT_KINDS",
+    "BARRIER_EVENT",
     "TraceEvent",
+    "Sink",
     "RingBufferSink",
     "JsonlSink",
     "TraceSession",
@@ -50,6 +61,37 @@ __all__ = [
 #: ``compile`` (capture.py), ``dispatch`` (doorbell.py), ``transfer``
 #: (dma.py), ``graph_launch`` (graphs.py), ``progress`` (semaphore.py).
 EVENT_KINDS = ("compile", "dispatch", "transfer", "graph_launch", "progress")
+
+#: Event name used by :meth:`TraceSession.barrier`.  Barrier events carry a
+#: shared id plus a wall-clock reading in ``meta``; :mod:`repro.obs.aggregate`
+#: uses them to align the per-process monotonic clocks of JSONL shards.
+BARRIER_EVENT = "obs.barrier"
+
+
+class Sink:
+    """The sink protocol (documentation class — duck typing is enough).
+
+    A sink must provide ``emit(event)``; it may provide ``flush()``,
+    ``close()``, and ``stats()``.  ``emit`` is always called under the owning
+    session's lock, but a sink shared across sessions (or wrapped in
+    :class:`~repro.obs.AsyncSink`'s writer thread) must synchronize its own
+    mutable state.  ``stats()`` returns a JSON-serializable dict and should
+    include a ``"sink"`` key naming the sink type plus whatever loss
+    accounting the sink keeps (``dropped``, ``sampled_away``, ...) — this is
+    how observability *loss* stays observable.
+    """
+
+    def emit(self, event: "TraceEvent") -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+    def stats(self) -> Dict[str, Any]:
+        return {"sink": type(self).__name__}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,32 +145,53 @@ class TraceEvent:
 
 
 class RingBufferSink:
-    """Bounded in-memory event store (drops oldest beyond ``maxlen``)."""
+    """Bounded in-memory event store (drops oldest beyond ``maxlen``).
+
+    Thread-safe: a ring shared across sessions (each serializing its own
+    ``emit`` under its own lock) still counts ``n_emitted``/``dropped``
+    exactly, and snapshot reads never observe a half-applied append.
+    """
 
     def __init__(self, maxlen: int = 4096) -> None:
         self.maxlen = int(maxlen)
         self._buf: collections.deque = collections.deque(maxlen=self.maxlen)
-        self.n_emitted = 0          # total ever seen, incl. dropped
+        self._lock = threading.Lock()
+        self._n_emitted = 0         # total ever seen, incl. dropped
 
     def emit(self, event: TraceEvent) -> None:
-        self._buf.append(event)
-        self.n_emitted += 1
+        with self._lock:
+            self._buf.append(event)
+            self._n_emitted += 1
+
+    @property
+    def n_emitted(self) -> int:
+        with self._lock:
+            return self._n_emitted
 
     @property
     def dropped(self) -> int:
-        return self.n_emitted - len(self._buf)
+        with self._lock:
+            return self._n_emitted - len(self._buf)
 
     def events(self) -> List[TraceEvent]:
-        return list(self._buf)
+        with self._lock:
+            return list(self._buf)
 
     def __len__(self) -> int:
-        return len(self._buf)
+        with self._lock:
+            return len(self._buf)
 
     def __iter__(self) -> Iterator[TraceEvent]:
-        return iter(list(self._buf))
+        return iter(self.events())
 
     def close(self) -> None:  # sink protocol
         pass
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"sink": "RingBufferSink", "maxlen": self.maxlen,
+                    "emitted": self._n_emitted,
+                    "dropped": self._n_emitted - len(self._buf)}
 
 
 class JsonlSink:
@@ -145,6 +208,7 @@ class JsonlSink:
         self.path = str(path)
         self._fh: Optional[IO[str]] = None
         self._lock = threading.Lock()
+        self._n_written = 0
 
     def emit(self, event: TraceEvent) -> None:
         line = json.dumps(event.to_dict()) + "\n"
@@ -152,6 +216,7 @@ class JsonlSink:
             if self._fh is None:
                 self._fh = open(self.path, "a")
             self._fh.write(line)
+            self._n_written += 1
 
     def flush(self) -> None:
         with self._lock:
@@ -164,6 +229,11 @@ class JsonlSink:
                 self._fh.flush()
                 self._fh.close()
                 self._fh = None
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"sink": "JsonlSink", "path": self.path,
+                    "written": self._n_written}
 
     @staticmethod
     def load(path: str) -> List[TraceEvent]:
@@ -211,9 +281,16 @@ class TraceSession:
     def __init__(self, name: str = "session",
                  sinks: Optional[Iterable[Any]] = None,
                  ring_size: int = 4096,
-                 jsonl_path: Optional[str] = None) -> None:
+                 jsonl_path: Optional[str] = None,
+                 tags: Optional[Dict[str, Any]] = None) -> None:
         self.name = name
+        #: Origin tags merged into every emitted event's ``meta`` (explicit
+        #: per-event meta wins on key collision).  Fleet launchers set
+        #: ``tags=distributed.context.process_tags()`` so per-process JSONL
+        #: shards identify themselves to :mod:`repro.obs.aggregate`.
+        self.tags: Dict[str, Any] = dict(tags or {})
         self.t0 = time.perf_counter()
+        self.t0_wall = time.time()
         self._seq = 0
         self._lock = threading.Lock()
         # Accounting accumulated at emit time, NOT derived from the ring —
@@ -254,10 +331,41 @@ class TraceSession:
             self.close()
 
     def close(self) -> None:
-        for s in self.sinks:
+        for s in list(self.sinks):
             close = getattr(s, "close", None)
             if close is not None:
                 close()
+
+    # -- sink management ----------------------------------------------------
+    def add_sink(self, sink: Any) -> Any:
+        """Attach a sink mid-flight (thread-safe w.r.t. concurrent emits)."""
+        with self._lock:
+            self.sinks = self.sinks + [sink]    # swap, never mutate in place
+        return sink
+
+    def remove_sink(self, sink: Any) -> None:
+        with self._lock:
+            self.sinks = [s for s in self.sinks if s is not sink]
+
+    def flush(self) -> None:
+        """Flush every sink that supports it (e.g. before aggregation)."""
+        for s in list(self.sinks):
+            flush = getattr(s, "flush", None)
+            if flush is not None:
+                flush()
+
+    def sink_stats(self) -> List[Dict[str, Any]]:
+        """Per-sink loss/throughput accounting (JSON-serializable).
+
+        Sinks without a ``stats()`` method report just their type name, so
+        the list always has one entry per installed sink.
+        """
+        out: List[Dict[str, Any]] = []
+        for s in list(self.sinks):
+            stats = getattr(s, "stats", None)
+            out.append(stats() if stats is not None
+                       else {"sink": type(s).__name__})
+        return out
 
     # -- emission ----------------------------------------------------------
     def emit(self, kind: str, name: str,
@@ -273,6 +381,8 @@ class TraceSession:
             raise ValueError(f"unknown event kind {kind!r}; "
                              f"expected one of {EVENT_KINDS}")
         t_abs = time.perf_counter() if t is None else t
+        if self.tags:
+            meta = {**self.tags, **meta}        # explicit meta wins
         # The whole emit is one critical section: sequence assignment,
         # accounting, and sink fan-out (lazy file opens, ring pushes) must
         # not interleave across threads.
@@ -298,6 +408,21 @@ class TraceSession:
             for s in self.sinks:
                 s.emit(ev)
         return ev
+
+    def barrier(self, barrier_id: str, wall: Optional[float] = None
+                ) -> TraceEvent:
+        """Emit a clock-alignment barrier event (name ``obs.barrier``).
+
+        Every process of a fleet emits a barrier with the *same*
+        ``barrier_id`` at (approximately) the same real moment — e.g. right
+        after a collective, or at mesh setup.  Each barrier records the
+        process-local session clock *and* a wall-clock reading, giving
+        :mod:`repro.obs.aggregate` two independent ways to solve for the
+        per-shard clock offset when merging JSONL shards.
+        """
+        return self.emit("progress", BARRIER_EVENT,
+                         barrier=str(barrier_id),
+                         wall=time.time() if wall is None else wall)
 
     # -- convenience wrappers (delegate to bound facades) ------------------
     def wrap(self, fn: Callable, name: str = "dispatch",
@@ -337,14 +462,30 @@ class TraceSession:
         only ``timeline()`` is bounded by the ring.  ``total_dispatch_s``
         sums host dispatch time over ``dispatch`` events only — compile and
         transfer durations live under their names in ``by_name``.
+
+        The schema is fixed whether or not anything was traced.  Keys:
+        ``session`` (name), ``events`` (total emitted), ``dropped`` (ring
+        overflow), ``by_kind`` / ``dur_s_by_kind`` / ``payload_by_kind``
+        (per-kind counts / host seconds / payload bytes), ``by_name``
+        (per-label ``{events, dur_s, payload_bytes}``),
+        ``total_payload_bytes``, ``total_dispatch_s``, and ``wall_s``.  An
+        *empty* session returns this exact shape zeroed — per-kind maps
+        carry every kind in :data:`EVENT_KINDS` at 0 — so downstream
+        consumers (live endpoints, BENCH artifacts, aggregation) never
+        special-case "nothing happened yet".
         """
         with self._lock:
+            n = self._seq
             by_kind = dict(self._by_kind)
             by_name = {k: dict(v) for k, v in self._by_name.items()}
             kind_dur = dict(self._kind_dur_s)
             kind_payload = dict(self._kind_payload)
             payload = self._total_payload
             dispatch_s = self._dispatch_s
+        if n == 0:
+            by_kind = {k: 0 for k in EVENT_KINDS}
+            kind_dur = {k: 0.0 for k in EVENT_KINDS}
+            kind_payload = {k: 0 for k in EVENT_KINDS}
         return {
             "session": self.name,
             "events": self.ring.n_emitted,

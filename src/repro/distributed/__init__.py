@@ -1,3 +1,5 @@
+from .context import process_info, process_tags, shard_path
 from .sharding import ShardingRules, dp_axes, mesh_axis_size
 
-__all__ = ["ShardingRules", "dp_axes", "mesh_axis_size"]
+__all__ = ["ShardingRules", "dp_axes", "mesh_axis_size",
+           "process_info", "process_tags", "shard_path"]

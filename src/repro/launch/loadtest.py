@@ -11,7 +11,16 @@ tokens-per-doorbell, all sourced from one ``TraceSession`` timeline.
 ``--verify N`` (on by default under ``--quick``) re-decodes N of the
 replayed requests through one-shot ``Server.serve()`` and checks the token
 streams are identical — the continuous-batching correctness invariant.
-``--json PATH`` writes the machine-readable run record.
+``--json PATH`` writes the machine-readable run record, including the final
+session ``summary()`` and per-sink drop/sample accounting.
+
+Observability options (``repro.obs``): ``--live [PORT]`` serves the
+engine's live summary over HTTP while the replay runs (``GET /summary``,
+``GET /stream``); ``--trace PATH`` streams the full event timeline to a
+JSONL shard through a non-blocking :class:`~repro.obs.AsyncSink` (tagged
+with host/process ids, ready for ``python -m repro.obs.aggregate``);
+``--sample KIND=N`` decimates high-rate kinds on that shard with exact
+sampled-away counts.
 """
 from __future__ import annotations
 
@@ -24,6 +33,17 @@ from ..configs import ARCHS, SMOKE_ARCHS
 
 def _csv_ints(s: str) -> tuple:
     return tuple(int(x) for x in s.split(",") if x)
+
+
+def _sample_spec(pairs) -> dict:
+    out = {}
+    for p in pairs or ():
+        kind, _, n = p.partition("=")
+        if not n:
+            raise argparse.ArgumentTypeError(
+                f"--sample expects KIND=N, got {p!r}")
+        out[kind] = int(n)
+    return out
 
 
 def main(argv=None) -> int:
@@ -54,6 +74,16 @@ def main(argv=None) -> int:
                     help="check N requests against one-shot serve() "
                          "(default: 4 under --quick, else 0)")
     ap.add_argument("--json", default="", help="write run record here")
+    ap.add_argument("--live", type=int, default=None, nargs="?", const=0,
+                    metavar="PORT",
+                    help="serve the live summary over HTTP during the run "
+                         "(PORT omitted or 0 -> ephemeral)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="stream the event timeline to a JSONL shard "
+                         "through a non-blocking AsyncSink")
+    ap.add_argument("--sample", action="append", metavar="KIND=N",
+                    help="keep 1-in-N events of KIND on the --trace shard "
+                         "(repeatable; barriers always kept)")
     args = ap.parse_args(argv)
 
     if args.quick:
@@ -65,7 +95,8 @@ def main(argv=None) -> int:
     verify_n = args.verify if args.verify is not None else (
         4 if args.quick else 0)
 
-    from ..core.session import TraceSession
+    from ..core.session import JsonlSink, TraceSession
+    from ..distributed.context import process_tags, shard_path
     from ..runtime.server import ContinuousBatchingServer, Request, Server
     from ..runtime.traffic import TrafficSpec, generate, replay
 
@@ -75,18 +106,43 @@ def main(argv=None) -> int:
                        new_tokens=args.new_tokens, seed=args.seed)
     arrivals = generate(spec, vocab_size=cfg.vocab_size)
 
-    with TraceSession(name="loadtest") as sess:
+    extra_sinks: List = []
+    if args.trace:
+        from ..obs import AsyncSink, SamplingSink
+        shard = shard_path(args.trace)
+        inner = JsonlSink(shard)
+        sample = _sample_spec(args.sample)
+        if sample:
+            inner = SamplingSink(inner, every=sample)
+        extra_sinks.append(AsyncSink(inner))
+        print(f"tracing -> {shard} (async"
+              + (f", sampling {sample}" if sample else "") + ")")
+
+    with TraceSession(name="loadtest", sinks=extra_sinks,
+                      tags=process_tags()) as sess:
         eng = ContinuousBatchingServer(
             cfg, batch_size=args.batch, max_seq=args.max_seq,
             tokens_per_launch=args.tokens_per_launch, seed=args.seed,
             session=sess, max_pending=args.max_pending,
             admission=args.admission)
+        live_srv = None
+        if args.live is not None:
+            live_srv = eng.start_live_endpoint(port=args.live)
+            print(f"live summary endpoint: {live_srv.url}/summary "
+                  f"(stream: {live_srv.url}/stream)")
+        sess.barrier("loadtest.start")
         print(f"loadtest: arch={cfg.name} slots={args.batch} T={eng.T} "
               f"requests={spec.n_requests} rate={spec.rate}/s "
               f"realtime={args.realtime} admission={args.admission}")
-        tickets, metrics = replay(eng, arrivals, realtime=args.realtime,
-                                  speed=args.speed)
+        try:
+            tickets, metrics = replay(eng, arrivals, realtime=args.realtime,
+                                      speed=args.speed)
+        finally:
+            if live_srv is not None:
+                eng.stop_live_endpoint()
+        sess.flush()                    # drain async sinks before reading
         summary = sess.summary()
+        sink_stats = sess.sink_stats()
 
     print(f"requests={metrics['requests']} completed={metrics['completed']} "
           f"evicted={metrics['evicted']} rejected={metrics['rejected']}")
@@ -131,6 +187,10 @@ def main(argv=None) -> int:
             "traffic": spec.to_dict(),
             "metrics": metrics,
             "session_summary": summary,
+            # per-sink loss accounting: how much observability this run
+            # traded away (async drops, sampled-away events) — BENCH
+            # artifacts carry it so the loss itself is tracked over PRs
+            "sink_stats": sink_stats,
             "tickets": [t.to_dict() for t in tickets],
             "verified": {"n": verify_n, "ok": ok} if verify_n else None,
         }

@@ -6,6 +6,9 @@
 ``--continuous`` serves the same requests through the continuous-batching
 engine (queued admission, per-request KV slots) instead of one static
 batch; ``python -m repro.launch.loadtest`` is the full traffic harness.
+``--live [PORT]`` (with ``--continuous``) exposes the engine's live
+session summary over HTTP while it runs (``GET /summary``,
+``GET /stream`` — see :mod:`repro.obs.live`).
 """
 from __future__ import annotations
 
@@ -33,6 +36,10 @@ def main() -> None:
                     help="serve through the continuous-batching engine")
     ap.add_argument("--requests", type=int, default=None,
                     help="request count for --continuous (default: batch)")
+    ap.add_argument("--live", type=int, default=None, nargs="?", const=0,
+                    metavar="PORT",
+                    help="with --continuous: serve the live summary over "
+                         "HTTP while the engine runs")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -53,9 +60,17 @@ def main() -> None:
                     max_new_tokens=args.new_tokens)
             for i in range(n)]
     if args.continuous:
+        live_srv = None
+        if args.live is not None:
+            live_srv = srv.start_live_endpoint(port=args.live)
+            print(f"live summary endpoint: {live_srv.url}/summary")
         for r in reqs:
             srv.submit(r)
-        out = srv.run()
+        try:
+            out = srv.run()
+        finally:
+            if live_srv is not None:
+                srv.stop_live_endpoint()
     else:
         out = srv.serve(reqs)
     print(out)

@@ -1,0 +1,30 @@
+"""repro.obs — fleet-wide observability on top of :class:`TraceSession`.
+
+The paper's contribution is *complete capture at the commit point* for one
+GPU; this package scales that observation model to the ROADMAP's fleet:
+
+* :mod:`repro.obs.sinks`      — :class:`AsyncSink` (bounded queue + writer
+  thread; the decode loop never blocks on trace I/O) and
+  :class:`SamplingSink` (deterministic per-kind decimation), both with
+  exact drop/sample accounting so observability loss is itself observable;
+* :mod:`repro.obs.aggregate`  — merge per-process JSONL shards into one
+  cross-host submission-ordered timeline, aligning per-process monotonic
+  clocks via shared barrier events (``python -m repro.obs.aggregate``);
+* :mod:`repro.obs.live`       — :class:`LiveSummary` (incremental,
+  session-schema summary) + :class:`LiveServer` (stdlib HTTP poll/stream
+  endpoint the serving engine exposes);
+* :mod:`repro.obs.trajectory` — the ``BENCH_<pr>.json`` perf gate:
+  per-metric regression detection and a markdown trend report
+  (``python -m repro.obs.trajectory``).
+"""
+from .aggregate import (MergedTimeline, Shard, aggregate, align, load_shard,
+                        merge, summarize)
+from .live import LiveServer, LiveSummary
+from .sinks import AsyncSink, SamplingSink
+
+__all__ = [
+    "AsyncSink", "SamplingSink",
+    "LiveServer", "LiveSummary",
+    "MergedTimeline", "Shard", "aggregate", "align", "load_shard", "merge",
+    "summarize",
+]

@@ -194,6 +194,14 @@ class ContinuousBatchingServer(Server):
     (``serve.submit/admit/finish/evict/reject``); a finish event carries
     the emitted tokens as its payload (4 bytes each), so token throughput
     is recoverable from session accounting alone.
+
+    Observability plane: the engine installs a
+    :class:`~repro.obs.LiveSummary` sink on its session, so
+    :meth:`live_summary` answers at any point *during* a run with the same
+    schema ``session.summary()`` gives post-mortem (plus engine state:
+    active slots, queue depth, ticket fates).  :meth:`start_live_endpoint`
+    serves that over HTTP (``GET /summary``, ``GET /stream``) — the
+    loadtest harness exposes it with ``--live``.
     """
 
     def __init__(self, cfg: ModelConfig, batch_size: int, max_seq: int,
@@ -207,6 +215,14 @@ class ContinuousBatchingServer(Server):
         self.queue = AdmissionQueue(max_pending=max_pending, policy=admission)
         self.tickets: List[RequestTicket] = []      # submit order, all fates
         self._slot_tix: List[Optional[RequestTicket]] = [None] * self.B
+
+        # live observability plane: every event the (possibly shared)
+        # session emits while this engine exists also folds into an
+        # incremental summary a poller can read mid-run
+        from ..obs.live import LiveSummary
+        self.live = LiveSummary(name=self.session.name)
+        self.session.add_sink(self.live)
+        self._live_server: Optional[Any] = None
 
         # Stacked per-slot decode state: leading axis = slot.  Every slot —
         # free or active — always holds a well-formed batch-1 state, so the
@@ -265,6 +281,40 @@ class ContinuousBatchingServer(Server):
     def close_intake(self) -> None:
         """No more submits: :meth:`run` may exit once everything drains."""
         self.queue.close()
+
+    # -- live observability (any thread) -----------------------------------
+    def live_summary(self) -> Dict[str, Any]:
+        """Session-schema summary *now*, plus engine state.
+
+        Safe from any thread while the decode loop runs; this is the
+        poll-mode payload of the live endpoint.
+        """
+        snap = self.live.snapshot()
+        tickets = list(self.tickets)
+        snap["engine"] = {
+            "slots": self.B,
+            "active": self.n_active,
+            "queued": len(self.queue),
+            "intake_closed": self.queue.closed,
+            "tickets": {s: sum(1 for t in tickets if t.status == s)
+                        for s in ("queued", "active", "done", "evicted",
+                                  "rejected")},
+            "tokens_emitted": sum(len(t.tokens) for t in tickets),
+        }
+        return snap
+
+    def start_live_endpoint(self, port: int = 0, host: str = "127.0.0.1"):
+        """Serve :meth:`live_summary` over HTTP; returns the started
+        :class:`~repro.obs.LiveServer` (``.url``, ``.stop()``)."""
+        from ..obs.live import LiveServer
+        self._live_server = LiveServer(self.live_summary, host=host,
+                                       port=port).start()
+        return self._live_server
+
+    def stop_live_endpoint(self) -> None:
+        if self._live_server is not None:
+            self._live_server.stop()
+            self._live_server = None
 
     # -- scheduling (decode-loop thread) -----------------------------------
     def _free_slots(self) -> List[int]:

@@ -1,0 +1,69 @@
+"""Property-based tests (hypothesis) on fleet aggregation invariants.
+
+Kept separate from test_obs.py: the module-level importorskip below skips
+this whole file when hypothesis is absent (it is in requirements-dev.txt,
+so CI always runs it).
+"""
+import json
+import os
+import random
+import tempfile
+
+import pytest
+
+from repro.core import TraceEvent
+from repro.obs import aggregate
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    true_times=st.lists(st.floats(0.001, 100.0, allow_nan=False,
+                                  allow_infinity=False),
+                        min_size=1, max_size=40),
+    skews=st.tuples(st.floats(-50.0, 50.0), st.floats(-50.0, 50.0)),
+    assign=st.lists(st.integers(0, 1), min_size=1, max_size=40),
+    shuffle_seed=st.integers(0, 2 ** 16),
+)
+def test_aggregate_property_monotonic_and_remerge_stable(
+        true_times, skews, assign, shuffle_seed):
+    """Shuffled multi-shard inputs with arbitrary clock skews merge into a
+    timeline monotonic in the aligned clock, stable under re-merge."""
+    n = min(len(true_times), len(assign))
+    true_times, assign = sorted(true_times[:n]), assign[:n]
+    with tempfile.TemporaryDirectory() as d:
+        paths = []
+        for p in (0, 1):
+            events = [TraceEvent(seq=0, kind="progress", name="obs.barrier",
+                                 t=0.0 - skews[p],
+                                 meta={"process": p, "barrier": "b0"})]
+            for tt, a in zip(true_times, assign):
+                if a == p:
+                    events.append(TraceEvent(
+                        seq=0, kind="dispatch", name=f"e{tt}",
+                        t=tt - skews[p], meta={"process": p}))
+            events.sort(key=lambda e: e.t)
+            events = [TraceEvent(seq=i, kind=e.kind, name=e.name, t=e.t,
+                                 meta=e.meta)
+                      for i, e in enumerate(events)]
+            random.Random(shuffle_seed + p).shuffle(events)
+            path = os.path.join(d, f"s{p}.jsonl")
+            with open(path, "w") as f:
+                for e in events:
+                    f.write(json.dumps(e.to_dict()) + "\n")
+            paths.append(path)
+        merged = aggregate(paths)
+        ts = [e.t for e in merged.events]
+        assert ts == sorted(ts)                     # monotonic aligned clock
+        assert len(merged.events) == n + 2
+        # both barriers coincide after alignment (up to float noise)
+        bs = [e.t for e in merged.events if e.name == "obs.barrier"]
+        assert abs(bs[0] - bs[1]) < 1e-6
+        # re-merge of the merged output is a fixed point
+        out = os.path.join(d, "m.jsonl")
+        merged.save(out)
+        again = aggregate([out])
+        assert [(e.seq, e.name) for e in again.events] == \
+            [(e.seq, e.name) for e in merged.events]

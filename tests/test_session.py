@@ -239,7 +239,98 @@ def test_report_interleaves_all_kinds_in_submission_order():
     assert "TRACE SESSION rep" in text
 
 
+def test_empty_session_summary_is_wellformed_and_zeroed():
+    """Regression: an untouched session must return the full documented
+    schema with zeros, not whatever falls out of empty accumulators."""
+    s = TraceSession("empty").summary()
+    json.dumps(s)               # serializable
+    kinds = {"compile", "dispatch", "transfer", "graph_launch", "progress"}
+    assert s["events"] == 0 and s["dropped"] == 0
+    assert s["by_kind"] == {k: 0 for k in kinds}
+    assert s["dur_s_by_kind"] == {k: 0.0 for k in kinds}
+    assert s["payload_by_kind"] == {k: 0 for k in kinds}
+    assert s["by_name"] == {}
+    assert s["total_payload_bytes"] == 0
+    assert s["total_dispatch_s"] == 0.0
+    assert s["wall_s"] >= 0.0
+    assert s["session"] == "empty"
+    # after the first event the per-kind maps track only what was seen
+    sess = TraceSession("one")
+    sess.emit("dispatch", "d")
+    assert sess.summary()["by_kind"] == {"dispatch": 1}
+
+
+def test_session_tags_land_in_every_event_meta():
+    with TraceSession("tagged", tags={"host": "h0", "process": 3}) as sess:
+        sess.emit("dispatch", "d")
+        sess.emit("transfer", "t", mode="inline")   # explicit meta merges
+        sess.emit("progress", "p", process=9)       # explicit wins
+    evs = sess.timeline()
+    assert all(e.meta["host"] == "h0" for e in evs)
+    assert evs[0].meta["process"] == 3
+    assert evs[1].meta == {"host": "h0", "process": 3, "mode": "inline"}
+    assert evs[2].meta["process"] == 9
+
+
+def test_session_barrier_emits_alignment_event():
+    with TraceSession("b") as sess:
+        ev = sess.barrier("sync-1")
+    assert ev.kind == "progress" and ev.name == "obs.barrier"
+    assert ev.meta["barrier"] == "sync-1"
+    assert isinstance(ev.meta["wall"], float)
+
+
+def test_sink_stats_one_entry_per_sink(tmp_path):
+    class Bare:                 # sink without stats()
+        def emit(self, e):
+            pass
+
+    path = str(tmp_path / "t.jsonl")
+    sess = TraceSession("stats", jsonl_path=path, sinks=[Bare()])
+    sess.emit("dispatch", "d")
+    stats = sess.sink_stats()
+    assert [s["sink"] for s in stats] == \
+        ["RingBufferSink", "JsonlSink", "Bare"]
+    assert stats[0]["emitted"] == 1
+    assert stats[1]["written"] == 1
+
+
+def test_add_and_remove_sink_midflight():
+    sess = TraceSession("dyn")
+    sess.emit("dispatch", "before")
+    late = RingBufferSink()
+    sess.add_sink(late)
+    sess.emit("dispatch", "during")
+    sess.remove_sink(late)
+    sess.emit("dispatch", "after")
+    assert [e.name for e in late.events()] == ["during"]
+
+
 # -- thread safety ----------------------------------------------------------
+
+def test_ring_buffer_sink_thread_safe_counts():
+    """Satellite: drop-count updates must be exact when one ring is shared
+    by several sessions emitting concurrently."""
+    import threading
+
+    ring = RingBufferSink(maxlen=64)
+    sessions = [TraceSession(f"s{i}", sinks=[ring]) for i in range(4)]
+
+    def pump(sess):
+        for _ in range(500):
+            sess.emit("progress", "p")
+
+    threads = [threading.Thread(target=pump, args=(s,)) for s in sessions]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert ring.n_emitted == 2000
+    assert len(ring) == 64
+    assert ring.dropped == 2000 - 64
+    st = ring.stats()
+    assert st["emitted"] == 2000 and st["dropped"] == 2000 - 64
+
 
 def test_emit_thread_safe_seq_and_jsonl(tmp_path):
     """A traffic thread and a decode loop share one session: sequence

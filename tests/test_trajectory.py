@@ -1,0 +1,161 @@
+"""repro.obs.trajectory: BENCH artifact diffing and the CI perf gate."""
+import json
+
+import pytest
+
+from repro.obs.trajectory import (diff_metrics, direction, extract_metrics,
+                                  load_artifact, main, trend_report)
+
+
+def _artifact(pr, latency=10.0, tokens_per_s=500.0, dispatch_s=0.5,
+              objective=7e-4, quick=True):
+    return {
+        "pr": pr, "quick": quick, "arch": "gemma-2b",
+        "sections": {
+            "dma": {"header": ["name", "nbytes", "latency_us",
+                               "bandwidth_gib_s"],
+                    "rows": [{"name": "inline", "nbytes": 256,
+                              "latency_us": latency,
+                              "bandwidth_gib_s": 1.0}]},
+            "loadtest": {"header": ["mode", "requests", "tokens_per_s",
+                                    "doorbells"],
+                         "rows": [{"mode": "T4", "requests": 16,
+                                   "tokens_per_s": tokens_per_s,
+                                   "doorbells": 40}]},
+        },
+        "session_summary": {"events": 100, "total_dispatch_s": dispatch_s},
+        "tuning": {"after": objective},
+    }
+
+
+def _write(tmp_path, name, art):
+    p = str(tmp_path / name)
+    with open(p, "w") as f:
+        json.dump(art, f)
+    return p
+
+
+# -- direction inference -----------------------------------------------------
+
+def test_direction_inference():
+    assert direction("latency_us") == "lower"
+    assert direction("ttft_p99_s") == "lower"
+    assert direction("doorbells") == "lower"
+    assert direction("doorbells_per_token") == "lower"
+    assert direction("score_s_per_token") == "lower"
+    assert direction("total_dispatch_s") == "lower"
+    assert direction("tokens_per_s") == "higher"
+    assert direction("tokens_per_doorbell") == "higher"
+    assert direction("bandwidth_gib_s") == "higher"
+    assert direction("steps_per_doorbell") == "higher"
+    # identity / workload-size columns are never scored
+    for col in ("name", "nbytes", "chain_len", "steps", "requests",
+                "tokens", "command_bytes_or_bw"):
+        assert direction(col) is None
+
+
+def test_extract_metrics_keys_rows_by_identity_cells():
+    m = extract_metrics(_artifact(7))
+    assert m["dma/name=inline,nbytes=256/latency_us"] == (10.0, "lower")
+    assert m["loadtest/mode=T4,requests=16/tokens_per_s"] == \
+        (500.0, "higher")
+    assert m["session/total_dispatch_s"] == (0.5, "lower")
+    assert m["tuning/objective_after"] == (7e-4, "lower")
+    # identity columns did not become metrics
+    assert not any(k.endswith("/nbytes") for k in m)
+
+
+def test_diff_metrics_direction_aware():
+    base = extract_metrics(_artifact(7))
+    # latency doubled (bad), throughput doubled (good)
+    cand = extract_metrics(_artifact(8, latency=20.0, tokens_per_s=1000.0))
+    regs, imps, n = diff_metrics(base, cand, threshold=0.25)
+    assert [r.metric for r in regs] == \
+        ["dma/name=inline,nbytes=256/latency_us"]
+    assert regs[0].worsened == pytest.approx(1.0)
+    assert [r.metric for r in imps] == \
+        ["loadtest/mode=T4,requests=16/tokens_per_s"]
+    # throughput *drop* is a regression for a higher-is-better metric
+    regs2, _, _ = diff_metrics(base,
+                               extract_metrics(_artifact(8,
+                                                         tokens_per_s=100.0)),
+                               threshold=0.25)
+    assert any("tokens_per_s" in r.metric for r in regs2)
+
+
+# -- CLI gate (acceptance: nonzero exit on injected synthetic regression) ----
+
+def test_cli_exits_nonzero_on_injected_regression(tmp_path, capsys):
+    b = _write(tmp_path, "BENCH_7.json", _artifact(7))
+    c = _write(tmp_path, "BENCH_8.json",
+               _artifact(8, latency=30.0))          # 3x latency regression
+    rc = main([b, c])
+    assert rc == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_cli_warn_only_reports_but_exits_zero(tmp_path, capsys):
+    b = _write(tmp_path, "BENCH_7.json", _artifact(7))
+    c = _write(tmp_path, "BENCH_8.json", _artifact(8, latency=30.0))
+    rc = main(["--baseline", b, "--candidate", c, "--warn-only"])
+    assert rc == 0
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_cli_clean_run_exits_zero_and_writes_report(tmp_path, capsys):
+    b = _write(tmp_path, "BENCH_7.json", _artifact(7))
+    c = _write(tmp_path, "BENCH_8.json",
+               _artifact(8, latency=9.5, tokens_per_s=520.0))
+    report = str(tmp_path / "TREND.md")
+    rc = main([b, c, "--report", report])
+    assert rc == 0
+    md = open(report).read()
+    assert "# BENCH trajectory report" in md
+    assert "pr 7 → pr 8" in md
+
+
+def test_cli_orders_positional_artifacts_by_pr_number(tmp_path):
+    # regression is 6→7; 7→8 (the gate pair) is clean even though the
+    # files are passed out of order
+    a6 = _write(tmp_path, "BENCH_6.json", _artifact(6, latency=10.0))
+    a7 = _write(tmp_path, "BENCH_7.json", _artifact(7, latency=30.0))
+    a8 = _write(tmp_path, "BENCH_8.json", _artifact(8, latency=31.0))
+    assert main([a8, a6, a7]) == 0
+    # flip it: make the final pair regress
+    a9 = _write(tmp_path, "BENCH_9.json", _artifact(9, latency=90.0))
+    assert main([a9, a6, a8, a7]) == 1
+
+
+def test_trend_report_flags_quick_full_mismatch(tmp_path):
+    base = _artifact(7, quick=False)
+    base["_path"] = "BENCH_7.json"
+    cand = _artifact(8, quick=True, latency=30.0)
+    cand["_path"] = "BENCH_ci.json"
+    md, regs = trend_report([base, cand], threshold=0.25)
+    assert "quick/full scale mismatch" in md
+    assert regs                                     # still computed
+
+
+def test_cli_unreadable_artifact_exits_two(tmp_path):
+    bad = str(tmp_path / "BENCH_bad.json")
+    with open(bad, "w") as f:
+        f.write("{not json")
+    ok = _write(tmp_path, "BENCH_7.json", _artifact(7))
+    assert main([ok, bad]) == 2
+    not_bench = _write(tmp_path, "BENCH_9.json", {"rows": []})
+    assert main([ok, not_bench]) == 2
+
+
+def test_zero_baseline_metrics_are_skipped(tmp_path):
+    b = _write(tmp_path, "BENCH_7.json", _artifact(7, dispatch_s=0.0))
+    c = _write(tmp_path, "BENCH_8.json", _artifact(8, dispatch_s=5.0))
+    # only the zero-baseline metric changed -> no regression flagged
+    assert main([b, c]) == 0
+
+
+def test_load_artifact_rejects_non_bench_json(tmp_path):
+    p = str(tmp_path / "x.json")
+    with open(p, "w") as f:
+        json.dump({"hello": 1}, f)
+    with pytest.raises(ValueError):
+        load_artifact(p)
