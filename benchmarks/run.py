@@ -8,19 +8,24 @@
   bench_kernels    — per-kernel interpret-mode sanity timings
 
 Prints ``name,value...`` CSV blocks (unchanged), and additionally writes a
-machine-readable artifact (``--out``, default ``BENCH_8.json``) recording
+machine-readable artifact (``--out``, default ``BENCH_9.json``) recording
 section -> rows (typed by the section header), the unified TraceSession
 summary, and the active tuned policy with its before/after objective — one
 point of the ROADMAP's perf trajectory, regenerated per PR and gated in CI
 by ``python -m repro.obs.trajectory`` against the newest committed
-``BENCH_*.json``.  ``--quick`` shrinks every sweep to CI scale.
+``BENCH_*.json`` (deterministic count metrics gate hard via
+``--gate-counts``; timings stay warn-only on shared runners).  The scored
+metrics are also appended to the persistent store
+(``results/metrics/bench.jsonl``; disable with ``--no-store``) so
+``python -m repro.obs.store trend --kind bench`` answers across runs.
+``--quick`` shrinks every sweep to CI scale.
 
 ONE :class:`repro.core.TraceSession` spans every section — installed as the
 ambient session and passed explicitly where a section builds its own objects
 — so the final block is the unified, submission-ordered event summary across
 DMA, graph-launch, trainer, and policy benchmarks.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--out BENCH_8.json]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--out BENCH_9.json]
 """
 from __future__ import annotations
 
@@ -30,7 +35,7 @@ import sys
 import time
 from typing import Any, Dict, List
 
-PR_NUMBER = 8
+PR_NUMBER = 9
 
 
 def _parse_cell(v: str) -> Any:
@@ -88,6 +93,9 @@ def main() -> None:
                     help="CI-scale sweeps (fewer sizes/chains/steps)")
     ap.add_argument("--arch", default="gemma-2b",
                     help="arch whose tuned policy the policy section benches")
+    ap.add_argument("--no-store", action="store_true",
+                    help="skip appending scored metrics to the persistent "
+                         "metrics store (results/metrics/bench.jsonl)")
     args = ap.parse_args()
 
     from repro.core import TraceSession
@@ -154,6 +162,24 @@ def main() -> None:
             json.dump(artifact, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"# wrote {args.out}")
+
+        if not args.no_store:
+            # one trajectory point per run in the persistent store — the
+            # same scored metrics the trajectory gate diffs, queryable
+            # across runs with `python -m repro.obs.store trend --kind
+            # bench` / `python -m repro.obs.trajectory --store bench`
+            try:
+                from repro.obs.store import MetricsStore
+                from repro.obs.trajectory import extract_metrics
+                scored = {k: v for k, (v, _d)
+                          in extract_metrics(artifact).items()}
+                rec = MetricsStore().append(
+                    "bench", scored,
+                    meta={"pr": PR_NUMBER, "quick": bool(args.quick),
+                          "arch": args.arch, "out": args.out})
+                print(f"# stored {len(scored)} metrics as run {rec.run_id}")
+            except OSError as e:
+                print(f"# metrics store unavailable ({e}); skipped")
 
 
 if __name__ == "__main__":

@@ -14,8 +14,9 @@ Behavior Insight":
 * :mod:`repro.core.roofline`  — 3-term roofline from captured streams
 * :mod:`repro.core.report`    — Listing-1-style decoded reports
 """
-from .session import (BARRIER_EVENT, EVENT_KINDS, JsonlSink, RingBufferSink,
-                      Sink, TraceEvent, TraceSession, current_session)
+from .session import (BARRIER_EVENT, EVENT_KINDS, SPAN_EVENT, JsonlSink,
+                      RingBufferSink, Sink, SpanFrame, SpanHandle, TraceEvent,
+                      TraceSession, ambient_span, current_session)
 from .capture import CapturedStream, CommandStreamCapture, capture_fn
 from .dma import (HybridMover, INLINE_THRESHOLD_DEFAULT, TransferRecord,
                   direct_put, inline_put, sweep_transfer)
@@ -28,8 +29,9 @@ from .roofline import (HW, TPU_V5E, RooflineReport, adjusted, analyze,
 from .semaphore import Heartbeat, ProgressTracker, SemaphoreToken
 
 __all__ = [
-    "BARRIER_EVENT", "EVENT_KINDS", "JsonlSink", "RingBufferSink", "Sink",
-    "TraceEvent", "TraceSession", "current_session",
+    "BARRIER_EVENT", "EVENT_KINDS", "SPAN_EVENT", "JsonlSink",
+    "RingBufferSink", "Sink", "SpanFrame", "SpanHandle", "TraceEvent",
+    "TraceSession", "ambient_span", "current_session",
     "CapturedStream", "CommandStreamCapture", "capture_fn",
     "HybridMover", "INLINE_THRESHOLD_DEFAULT", "TransferRecord",
     "direct_put", "inline_put", "sweep_transfer",

@@ -33,28 +33,44 @@ there are *tagged* (``tags={"host": ..., "process": ...}``) so every event's
 ``meta`` carries its origin and per-process JSONL shards can be merged into
 one cross-host submission-ordered timeline.
 
+Causal attribution rides on *spans*: ``with sess.span("request", uid=7):``
+opens a nestable, contextvar-scoped span, and every event emitted under it
+is stamped with the span's identity (``span_id``/``parent_span_id``/
+``span_path``/``span_ids``) — each doorbell, transfer, and graph launch is
+tied back to the API call that caused it.  Closing a span emits an
+:data:`SPAN_EVENT` close event; :mod:`repro.obs.profile` turns those into
+per-span command-attribution profiles and :mod:`repro.obs.export` renders
+them as nested Perfetto duration events.
+
 :meth:`TraceSession.report` renders the Listing-1-style interleaved timeline;
 :meth:`TraceSession.summary` gives JSON-serializable per-kind accounting.
 """
 from __future__ import annotations
 
 import collections
+import contextlib
 import contextvars
 import dataclasses
 import json
 import threading
 import time
-from typing import Any, Callable, Dict, IO, Iterable, Iterator, List, Optional
+import warnings
+from typing import (Any, Callable, Dict, IO, Iterable, Iterator, List,
+                    Optional, Tuple)
 
 __all__ = [
     "EVENT_KINDS",
     "BARRIER_EVENT",
+    "SPAN_EVENT",
     "TraceEvent",
     "Sink",
+    "SpanFrame",
+    "SpanHandle",
     "RingBufferSink",
     "JsonlSink",
     "TraceSession",
     "current_session",
+    "ambient_span",
 ]
 
 #: The five submission-event kinds, mirroring the subsystems they unify:
@@ -66,6 +82,14 @@ EVENT_KINDS = ("compile", "dispatch", "transfer", "graph_launch", "progress")
 #: shared id plus a wall-clock reading in ``meta``; :mod:`repro.obs.aggregate`
 #: uses them to align the per-process monotonic clocks of JSONL shards.
 BARRIER_EVENT = "obs.barrier"
+
+#: Event name emitted when a span closes (see :meth:`TraceSession.span`).
+#: A span-close event records the span's start time (``t``), duration
+#: (``dur_s``), identity (``span``/``span_id``/``parent_span_id``/
+#: ``span_path``/``span_ids``) and any caller attributes — the causal unit
+#: :mod:`repro.obs.profile` attributes command traffic to and
+#: :mod:`repro.obs.export` renders as a Perfetto duration event.
+SPAN_EVENT = "obs.span"
 
 
 class Sink:
@@ -237,13 +261,31 @@ class JsonlSink:
 
     @staticmethod
     def load(path: str) -> List[TraceEvent]:
-        """Read a JSONL trace back into events (round-trip helper)."""
-        out: List[TraceEvent] = []
+        """Read a JSONL trace back into events (round-trip helper).
+
+        A malformed *final* line is skipped with a warning instead of
+        raising: a process killed mid-write leaves a truncated last line,
+        and :mod:`repro.obs.aggregate` must still merge the shards of dead
+        processes.  Corruption anywhere earlier still raises — that is not
+        a crash artifact but a broken file.
+        """
         with open(path) as f:
-            for line in f:
-                line = line.strip()
-                if line:
-                    out.append(TraceEvent.from_dict(json.loads(line)))
+            lines = f.read().splitlines()
+        out: List[TraceEvent] = []
+        for i, line in enumerate(lines):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(TraceEvent.from_dict(json.loads(line)))
+            except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+                if any(l.strip() for l in lines[i + 1:]):
+                    raise
+                warnings.warn(
+                    f"{path}: skipping truncated trailing line "
+                    f"({len(line)} chars) — partial write from a "
+                    f"crashed/killed process", RuntimeWarning)
+                break
         return out
 
 
@@ -254,6 +296,95 @@ _current: contextvars.ContextVar = contextvars.ContextVar(
 def current_session() -> Optional["TraceSession"]:
     """The ambient session installed by ``with TraceSession(...)`` (or None)."""
     return _current.get()
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanFrame:
+    """Immutable identity of one span: its place in the causal tree.
+
+    ``ids`` is the full ancestor chain ending at this span (so the root
+    request a deeply nested doorbell belongs to is recoverable from the
+    stamped event alone, with no ordering assumptions); ``path`` is the
+    matching ``/``-joined name chain, the aggregation key
+    :class:`~repro.obs.profile.SpanProfile` reports by.
+    """
+
+    span_id: int
+    parent_id: Optional[int]
+    name: str
+    path: str                   # "request/decode_iter"
+    ids: Tuple[int, ...]        # ancestor span_ids, self last
+
+    def stamp(self) -> Dict[str, Any]:
+        """The meta keys stamped onto every event emitted under this span."""
+        return {"span": self.name, "span_id": self.span_id,
+                "parent_span_id": self.parent_id, "span_path": self.path,
+                "span_ids": list(self.ids)}
+
+
+class SpanHandle:
+    """One open span; :meth:`end` emits its ``obs.span`` close event.
+
+    Handles exist so *logical* spans that cannot be a lexical ``with``
+    block — a serve request whose decode launches interleave with other
+    requests' — can still be first-class spans: the owner keeps the handle,
+    accumulates attribution (doorbell participations, payload bytes), and
+    declares them at :meth:`end`.  Context-managed spans
+    (:meth:`TraceSession.span`) are built on the same handle and close
+    automatically.
+    """
+
+    def __init__(self, session: "TraceSession", frame: SpanFrame,
+                 attrs: Dict[str, Any], t_start: float) -> None:
+        self.session = session
+        self.frame = frame
+        self.attrs = dict(attrs)
+        self.t_start = t_start          # absolute perf_counter reading
+        self.scoped = False             # True when contextvar-installed
+        self._done = False
+
+    @property
+    def span_id(self) -> int:
+        return self.frame.span_id
+
+    @property
+    def name(self) -> str:
+        return self.frame.name
+
+    def end(self, **attrs: Any) -> Optional["TraceEvent"]:
+        """Close the span (idempotent); extra ``attrs`` merge into — and on
+        collision win over — the open-time attributes.
+
+        Declared-attribution keys (``doorbells``, ``payload``,
+        ``graph_launches``) are how an owner credits work that was shared
+        with other spans (e.g. one vmapped decode launch serving many
+        requests) to this span explicitly.
+        """
+        if self._done:
+            return None
+        self._done = True
+        t_end = time.perf_counter()
+        meta = {**self.frame.stamp(), "scoped": self.scoped,
+                "thread": threading.get_ident(), **self.attrs, **attrs}
+        # Stamped at *end* time: in a time-sorted merged timeline the close
+        # must follow every event emitted inside the span, or consumers
+        # (SpanProfile) would fold the span before crediting them.  Slice
+        # start is recoverable as ``t - dur_s``.
+        return self.session.emit("progress", SPAN_EVENT,
+                                 dur_s=t_end - self.t_start,
+                                 t=t_end, **meta)
+
+
+def ambient_span(name: str, **attrs: Any):
+    """Span on the ambient session — a no-op context when none is active.
+
+    Lets library code (e.g. :func:`repro.runtime.steps.init_all`) declare
+    causal structure unconditionally without forcing a session on callers.
+    """
+    sess = current_session()
+    if sess is None:
+        return contextlib.nullcontext(None)
+    return sess.span(name, **attrs)
 
 
 class TraceSession:
@@ -292,6 +423,13 @@ class TraceSession:
         self.t0 = time.perf_counter()
         self.t0_wall = time.time()
         self._seq = 0
+        self._span_seq = 0
+        # The active span stack is contextvar-scoped: each thread (and each
+        # asyncio task) sees only the spans it opened itself, so a traffic
+        # thread's submits are never mis-attributed to the decode loop's
+        # iteration span.  Per-instance so two sessions never share a stack.
+        self._span_var: contextvars.ContextVar = contextvars.ContextVar(
+            f"repro_span_{id(self)}", default=None)
         self._lock = threading.Lock()
         # Accounting accumulated at emit time, NOT derived from the ring —
         # summary() stays exact even after the bounded ring drops events.
@@ -367,6 +505,60 @@ class TraceSession:
                        else {"sink": type(s).__name__})
         return out
 
+    # -- spans (causal attribution) ----------------------------------------
+    def current_span(self) -> Optional[SpanFrame]:
+        """The innermost span active in *this* context (or None)."""
+        return self._span_var.get()
+
+    def start_span(self, name: str, parent: Optional[SpanFrame] = None,
+                   **attrs: Any) -> SpanHandle:
+        """Open a span *without* installing it as ambient context.
+
+        The returned handle must be closed with ``handle.end(**attrs)``.
+        ``parent`` defaults to the caller's current ambient span, so manual
+        spans still slot into the causal tree.  Use :meth:`span` for the
+        common lexically-scoped case — manual handles are for spans whose
+        lifetime crosses scheduler iterations (a serve request).
+        """
+        if parent is None:
+            parent = self._span_var.get()
+        with self._lock:
+            sid = self._span_seq
+            self._span_seq += 1
+        if parent is None:
+            frame = SpanFrame(span_id=sid, parent_id=None, name=name,
+                              path=name, ids=(sid,))
+        else:
+            frame = SpanFrame(span_id=sid, parent_id=parent.span_id,
+                              name=name, path=f"{parent.path}/{name}",
+                              ids=parent.ids + (sid,))
+        return SpanHandle(self, frame, attrs, time.perf_counter())
+
+    @contextlib.contextmanager
+    def span(self, name: str, **attrs: Any) -> Iterator[SpanHandle]:
+        """Nestable causal span: every event emitted in this context (and
+        thread) is stamped with the span's identity.
+
+        ::
+
+            with sess.span("request", uid=7):
+                prefill(...)                    # dispatch -> span-stamped
+                with sess.span("decode_iter"):  # nested child span
+                    decode(...)
+
+        Exiting emits the ``obs.span`` close event (``t`` = span start,
+        ``dur_s`` = span wall time) carrying ``attrs``.  Contextvar scoping
+        makes concurrent threads' spans invisible to each other.
+        """
+        handle = self.start_span(name, **attrs)
+        handle.scoped = True
+        token = self._span_var.set(handle.frame)
+        try:
+            yield handle
+        finally:
+            self._span_var.reset(token)
+            handle.end()
+
     # -- emission ----------------------------------------------------------
     def emit(self, kind: str, name: str,
              dur_s: float = 0.0, complete_s: float = 0.0,
@@ -381,6 +573,12 @@ class TraceSession:
             raise ValueError(f"unknown event kind {kind!r}; "
                              f"expected one of {EVENT_KINDS}")
         t_abs = time.perf_counter() if t is None else t
+        # Attribution stamping: tags < active span < explicit meta.  A
+        # span-close event carries its *own* identity explicitly, so the
+        # (by then parent) ambient frame never overwrites it.
+        frame = self._span_var.get()
+        if frame is not None:
+            meta = {**frame.stamp(), **meta}
         if self.tags:
             meta = {**self.tags, **meta}        # explicit meta wins
         # The whole emit is one critical section: sequence assignment,

@@ -21,6 +21,14 @@ JSONL shard through a non-blocking :class:`~repro.obs.AsyncSink` (tagged
 with host/process ids, ready for ``python -m repro.obs.aggregate``);
 ``--sample KIND=N`` decimates high-rate kinds on that shard with exact
 sampled-away counts.
+
+Every run also carries a :class:`~repro.obs.profile.SpanProfile` sink, so
+the report — and the ``--json`` record, under ``"span_profile"`` — includes
+per-request causal attribution: doorbells, payload bytes, and graph
+launches per ``serve.request`` span, with wall-time p50/p90/p99 from
+streaming histograms.  ``--store [ROOT]`` appends the run's metrics and
+span attribution to the persistent store (:mod:`repro.obs.store`;
+``results/metrics/`` by default) for cross-run trend queries.
 """
 from __future__ import annotations
 
@@ -84,6 +92,11 @@ def main(argv=None) -> int:
     ap.add_argument("--sample", action="append", metavar="KIND=N",
                     help="keep 1-in-N events of KIND on the --trace shard "
                          "(repeatable; barriers always kept)")
+    ap.add_argument("--store", default=None, nargs="?", const="",
+                    metavar="ROOT",
+                    help="append run metrics + span attribution to the "
+                         "persistent metrics store (default root: "
+                         "results/metrics, or REPRO_METRICS_DIR)")
     args = ap.parse_args(argv)
 
     if args.quick:
@@ -97,6 +110,7 @@ def main(argv=None) -> int:
 
     from ..core.session import JsonlSink, TraceSession
     from ..distributed.context import process_tags, shard_path
+    from ..obs.profile import SpanProfile
     from ..runtime.server import ContinuousBatchingServer, Request, Server
     from ..runtime.traffic import TrafficSpec, generate, replay
 
@@ -106,7 +120,10 @@ def main(argv=None) -> int:
                        new_tokens=args.new_tokens, seed=args.seed)
     arrivals = generate(spec, vocab_size=cfg.vocab_size)
 
-    extra_sinks: List = []
+    # per-span causal attribution rides every run: feeds the report, the
+    # --json record, and (with --store) the persistent metrics store
+    prof = SpanProfile(name="loadtest")
+    extra_sinks: List = [prof]
     if args.trace:
         from ..obs import AsyncSink, SamplingSink
         shard = shard_path(args.trace)
@@ -154,6 +171,14 @@ def main(argv=None) -> int:
           f"tokens/doorbell={metrics['tokens_per_doorbell']:.2f} "
           f"({metrics['new_tokens']} tokens / {metrics['doorbells']} "
           f"doorbells)")
+    req_attr = prof.path("serve.request")
+    if req_attr:
+        db, wall = req_attr["doorbells_per_span"], req_attr["wall_s"]
+        print(f"per-request attribution: doorbells p50={db['p50']:.1f} "
+              f"p99={db['p99']:.1f}  wall p50={wall['p50']*1e3:.1f}ms "
+              f"p99={wall['p99']*1e3:.1f}ms  "
+              f"payload={req_attr['payload_bytes']}B over "
+              f"{req_attr['spans']} requests")
 
     ok = True
     if verify_n:
@@ -191,6 +216,10 @@ def main(argv=None) -> int:
             # traded away (async drops, sampled-away events) — BENCH
             # artifacts carry it so the loss itself is tracked over PRs
             "sink_stats": sink_stats,
+            # causal attribution: per-span-path doorbell/payload/launch
+            # totals plus wall/doorbell/payload percentile summaries from
+            # the streaming histograms (serve.request = one span/request)
+            "span_profile": prof.snapshot(),
             "tickets": [t.to_dict() for t in tickets],
             "verified": {"n": verify_n, "ok": ok} if verify_n else None,
         }
@@ -199,6 +228,20 @@ def main(argv=None) -> int:
             f.write("\n")
         print(f"wrote {args.json}")
 
+    if args.store is not None:
+        from ..obs.store import MetricsStore, new_run_id
+        store = MetricsStore(root=args.store or None)
+        run_id = new_run_id()
+        numeric = {k: float(v) for k, v in metrics.items()
+                   if isinstance(v, (int, float))}
+        store.append("loadtest", numeric, run_id=run_id,
+                     meta={"arch": cfg.name, "slots": args.batch,
+                           "tokens_per_launch": eng.T})
+        store.append("span_profile", prof.store_metrics(), run_id=run_id,
+                     meta={"arch": cfg.name})
+        print(f"stored run {run_id} -> {store.root}")
+
+    print(prof.report())
     print(eng.session.report(max_events=20, kinds=("progress",)))
     return 0 if ok else 1
 

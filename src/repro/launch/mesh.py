@@ -1,17 +1,28 @@
-"""Production meshes.
+"""Production meshes + the fleet-identity session helper.
 
-Defined as FUNCTIONS so importing this module never touches jax device
-state; the dry-run sets ``xla_force_host_platform_device_count`` before
-calling.  Axes:
+Meshes are defined as FUNCTIONS so importing this module never touches jax
+device state; the dry-run sets ``xla_force_host_platform_device_count``
+before calling.  Axes:
 
   (data=16, model=16)            — one v5e pod slice, 256 chips
   (pod=2, data=16, model=16)     — two pods, 512 chips
+
+:func:`fleet_session` is the one place launchers build their
+:class:`~repro.core.session.TraceSession`: it stamps the session with
+:func:`~repro.distributed.context.process_tags` (so every event carries
+``host``/``process`` — the shard identity :mod:`repro.obs.aggregate`
+merges by) and, when a trace path is given, attaches a
+:class:`~repro.core.session.JsonlSink` at the per-process
+:func:`~repro.distributed.context.shard_path`.
 """
 from __future__ import annotations
 
+from typing import Optional, Tuple
+
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh", "SINGLE_POD", "MULTI_POD"]
+__all__ = ["make_production_mesh", "make_mesh", "fleet_session",
+           "SINGLE_POD", "MULTI_POD"]
 
 SINGLE_POD = (16, 16)
 MULTI_POD = (2, 16, 16)
@@ -41,3 +52,19 @@ def make_mesh(data: int, model: int, pod: int = 1):
     if pod > 1:
         return _make((pod, data, model), ("pod", "data", "model"))
     return _make((data, model), ("data", "model"))
+
+
+def fleet_session(name: str, trace_path: Optional[str] = None
+                  ) -> Tuple["object", Optional[str]]:
+    """Build this process's fleet-identified :class:`TraceSession`.
+
+    Returns ``(session, shard_jsonl_path)`` — the path is None without
+    ``trace_path``, else the :func:`shard_path`-mangled per-process file
+    (``trace.jsonl`` -> ``trace.p3.jsonl`` in a 4-process fleet) ready for
+    ``python -m repro.obs.aggregate`` / ``python -m repro.obs.export``.
+    """
+    from ..core.session import TraceSession
+    from ..distributed.context import process_tags, shard_path
+    path = shard_path(trace_path) if trace_path else None
+    return TraceSession(name=name, jsonl_path=path,
+                        tags=process_tags()), path

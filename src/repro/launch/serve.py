@@ -9,6 +9,12 @@ batch; ``python -m repro.launch.loadtest`` is the full traffic harness.
 ``--live [PORT]`` (with ``--continuous``) exposes the engine's live
 session summary over HTTP while it runs (``GET /summary``,
 ``GET /stream`` — see :mod:`repro.obs.live`).
+
+``--trace PATH`` writes a fleet-identified JSONL shard of the run
+(``host``/``process`` tags, per-process filename) for
+``repro.obs.aggregate`` / ``repro.obs.export``; ``--profile`` prints
+per-span command attribution (``serve.request``, ``serve.decode_iter``,
+``serve.prefill``) after the run.
 """
 from __future__ import annotations
 
@@ -19,6 +25,7 @@ import numpy as np
 from ..configs import ARCHS, SMOKE_ARCHS
 from ..runtime.server import ContinuousBatchingServer, Request, Server
 from ..tune.policy import load_policy_for
+from .mesh import fleet_session
 
 
 def main() -> None:
@@ -41,15 +48,26 @@ def main() -> None:
                     help="with --continuous: serve the live summary over "
                          "HTTP while the engine runs")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write this process's JSONL trace shard "
+                         "(fleet-tagged, per-process filename)")
+    ap.add_argument("--profile", action="store_true",
+                    help="print per-span command attribution after the run")
     args = ap.parse_args()
 
     cfg = (SMOKE_ARCHS if args.smoke else ARCHS)[args.arch]
     tpl = args.tokens_per_launch
     if tpl is None and load_policy_for(cfg, activate=False) is None:
         tpl = 4                      # legacy CLI default when untuned
+    session, shard = fleet_session("serve", trace_path=args.trace)
+    prof = None
+    if args.profile:
+        from ..obs.profile import SpanProfile
+        prof = SpanProfile(name="serve")
+        session.add_sink(prof)
     cls = ContinuousBatchingServer if args.continuous else Server
     srv = cls(cfg, batch_size=args.batch, max_seq=args.max_seq,
-              tokens_per_launch=tpl, seed=args.seed)
+              tokens_per_launch=tpl, seed=args.seed, session=session)
     if srv.policy is not None:
         print(f"policy: {srv.policy.arch} knobs={srv.policy.knobs} "
               f"objective={srv.policy.objective.get('after')}")
@@ -77,6 +95,11 @@ def main() -> None:
     for r in reqs[:2]:
         print(f"req {r.uid}: {r.tokens}")
     print(srv.session.report(max_events=30))
+    if prof is not None:
+        print(prof.report())
+    session.close()
+    if shard:
+        print(f"trace shard: {shard}")
 
 
 if __name__ == "__main__":

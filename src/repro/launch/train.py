@@ -2,10 +2,16 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --steps 50 \
         [--smoke] [--steps-per-launch 4] [--ckpt-dir /tmp/ckpt] \
-        [--grad-compression int8] [--seq 256 --batch 8]
+        [--grad-compression int8] [--seq 256 --batch 8] \
+        [--trace trace.jsonl] [--profile]
 
 On this CPU container use ``--smoke`` (reduced config); on a real slice the
 full config + production mesh apply (see launch/dryrun.py for the sharding).
+
+``--trace PATH`` writes this process's fleet-identified JSONL shard (tagged
+``host``/``process``, per-process filename) for ``repro.obs.aggregate`` /
+``repro.obs.export``; ``--profile`` prints per-``train.step`` span
+attribution (doorbells, payload, wall p50/p90/p99).
 """
 from __future__ import annotations
 
@@ -15,6 +21,7 @@ from ..configs import ARCHS, SMOKE_ARCHS
 from ..configs.shapes import ShapeConfig
 from ..runtime.trainer import Trainer
 from ..tune.policy import load_policy_for
+from .mesh import fleet_session
 
 
 def main() -> None:
@@ -34,6 +41,11 @@ def main() -> None:
                     choices=[None, "int8"])
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write this process's JSONL trace shard "
+                         "(fleet-tagged, per-process filename)")
+    ap.add_argument("--profile", action="store_true",
+                    help="print per-span command attribution after the run")
     args = ap.parse_args()
 
     cfg = (SMOKE_ARCHS if args.smoke else ARCHS)[args.arch]
@@ -41,10 +53,16 @@ def main() -> None:
     spl = args.steps_per_launch
     if spl is None and load_policy_for(cfg, activate=False) is None:
         spl = 4                      # legacy CLI default when untuned
+    session, shard = fleet_session("train", trace_path=args.trace)
+    prof = None
+    if args.profile:
+        from ..obs.profile import SpanProfile
+        prof = SpanProfile(name="train")
+        session.add_sink(prof)
     tr = Trainer(cfg, shape, steps_per_launch=spl,
                  ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                  grad_compression=args.grad_compression,
-                 peak_lr=args.lr, seed=args.seed)
+                 peak_lr=args.lr, seed=args.seed, session=session)
     if tr.policy is not None:
         print(f"policy: {tr.policy.arch} knobs={tr.policy.knobs} "
               f"objective={tr.policy.objective.get('after')}")
@@ -54,6 +72,11 @@ def main() -> None:
     print(out)
     print(tr.submission_report())
     print(tr.trace_report(max_events=30))
+    if prof is not None:
+        print(prof.report())
+    session.close()
+    if shard:
+        print(f"trace shard: {shard}")
 
 
 if __name__ == "__main__":

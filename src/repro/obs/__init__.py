@@ -15,16 +15,33 @@ GPU; this package scales that observation model to the ROADMAP's fleet:
   endpoint the serving engine exposes);
 * :mod:`repro.obs.trajectory` — the ``BENCH_<pr>.json`` perf gate:
   per-metric regression detection and a markdown trend report
-  (``python -m repro.obs.trajectory``).
+  (``python -m repro.obs.trajectory``; deterministic count metrics gate
+  hard via ``--gate-counts``);
+* :mod:`repro.obs.profile`    — :class:`SpanProfile`: per-span causal
+  command attribution (doorbells, payload, graph launches per request /
+  decode iteration / train step) with streaming :class:`LogHistogram`
+  percentiles — no raw samples retained;
+* :mod:`repro.obs.export`     — Chrome-trace / Perfetto JSON export of any
+  timeline (``python -m repro.obs.export``): scoped spans as nested
+  slices, request spans as async pairs, shards as processes;
+* :mod:`repro.obs.store`      — :class:`MetricsStore`: append-only
+  persistent metrics keyed by (run_id, git_sha, timestamp) under
+  ``results/metrics/`` with a query/trend CLI
+  (``python -m repro.obs.store``).
 """
 from .aggregate import (MergedTimeline, Shard, aggregate, align, load_shard,
                         merge, summarize)
+from .export import to_chrome_trace
 from .live import LiveServer, LiveSummary
+from .profile import LogHistogram, SpanProfile
 from .sinks import AsyncSink, SamplingSink
+from .store import MetricRecord, MetricsStore
 
 __all__ = [
     "AsyncSink", "SamplingSink",
     "LiveServer", "LiveSummary",
+    "LogHistogram", "SpanProfile",
+    "MetricRecord", "MetricsStore",
     "MergedTimeline", "Shard", "aggregate", "align", "load_shard", "merge",
-    "summarize",
+    "summarize", "to_chrome_trace",
 ]

@@ -27,6 +27,7 @@ from typing import Any, Callable, Dict, Optional
 from urllib.parse import parse_qs, urlparse
 
 from ..core.session import EVENT_KINDS, TraceEvent
+from .profile import DEFAULT_GROWTH, LogHistogram
 
 __all__ = ["LiveSummary", "LiveServer"]
 
@@ -37,17 +38,23 @@ class LiveSummary:
     Fed as a sink (each ``emit`` folds one event in); :meth:`snapshot`
     returns the accumulated summary under the same keys a session's
     ``summary()`` uses, plus a monotonically increasing ``updates`` counter
-    so pollers can cheaply detect change.
+    so pollers can cheaply detect change.  Per-kind duration distributions
+    are kept in streaming :class:`~repro.obs.profile.LogHistogram`\\ s, so
+    ``/summary`` and ``/stream`` report p50/p99 per event kind mid-run
+    without ever storing raw samples.
     """
 
-    def __init__(self, name: str = "live") -> None:
+    def __init__(self, name: str = "live",
+                 growth: float = DEFAULT_GROWTH) -> None:
         self.name = name
+        self.growth = float(growth)
         self._lock = threading.Lock()
         self._t_start = time.perf_counter()
         self._n = 0
         self._by_kind: Dict[str, int] = {}
         self._kind_dur: Dict[str, float] = {}
         self._kind_payload: Dict[str, int] = {}
+        self._kind_hist: Dict[str, LogHistogram] = {}
         self._by_name: Dict[str, Dict[str, Any]] = {}
         self._payload = 0
         self._dispatch_s = 0.0
@@ -60,6 +67,10 @@ class LiveSummary:
             self._kind_dur[k] = self._kind_dur.get(k, 0.0) + event.dur_s
             self._kind_payload[k] = (self._kind_payload.get(k, 0)
                                      + event.payload_bytes)
+            hist = self._kind_hist.get(k)
+            if hist is None:
+                hist = self._kind_hist[k] = LogHistogram(self.growth)
+            hist.add(event.dur_s)
             d = self._by_name.setdefault(event.name, {"events": 0,
                                                       "dur_s": 0.0,
                                                       "payload_bytes": 0})
@@ -76,6 +87,11 @@ class LiveSummary:
             by_kind = dict(self._by_kind)
             kind_dur = dict(self._kind_dur)
             kind_payload = dict(self._kind_payload)
+            percentiles = {k: {"p50": h.percentile(50.0),
+                               "p90": h.percentile(90.0),
+                               "p99": h.percentile(99.0),
+                               "mean": h.mean, "max": h.max}
+                           for k, h in self._kind_hist.items()}
             by_name = {k: dict(v) for k, v in self._by_name.items()}
             payload = self._payload
             dispatch_s = self._dispatch_s
@@ -90,6 +106,7 @@ class LiveSummary:
             "by_kind": by_kind,
             "dur_s_by_kind": kind_dur,
             "payload_by_kind": kind_payload,
+            "dur_percentiles_by_kind": percentiles,
             "by_name": by_name,
             "total_payload_bytes": payload,
             "total_dispatch_s": dispatch_s,

@@ -14,15 +14,26 @@ like ``nbytes``/``chain_len``), so rows match across artifacts even when
 row order changes.  Direction (lower- vs higher-is-better) is inferred from
 the column name; identity/size columns are never scored.
 
+Warn-only is a *timing* concession, not a blanket one: with
+``--gate-counts``, regressions in deterministic count metrics (doorbells,
+command footprint bytes, tokens-per-doorbell — exact on any runner) still
+fail the run even under ``--warn-only``.  CI uses exactly that split.
+
 CLI::
 
     python -m repro.obs.trajectory BENCH_6.json BENCH_7.json BENCH_8.json \
-        [--threshold 0.25] [--report TREND.md] [--warn-only]
+        [--threshold 0.25] [--report TREND.md] [--warn-only] [--gate-counts]
     python -m repro.obs.trajectory --baseline BENCH_7.json \
-        --candidate BENCH_ci.json --warn-only --report TREND.md
+        --candidate BENCH_ci.json --warn-only --gate-counts --report TREND.md
+    python -m repro.obs.trajectory --store loadtest [--store-root DIR]
 
-Exit status: 0 clean (or ``--warn-only``), 1 regression(s) beyond
-threshold, 2 usage / unreadable artifact.
+``--store KIND`` diffs the two newest records of ``KIND`` in the
+persistent metrics store (:mod:`repro.obs.store`) instead of BENCH
+artifacts — same directions, thresholds, and exit codes.
+
+Exit status: 0 clean (or ``--warn-only`` with no enforced count
+regressions), 1 regression(s) beyond threshold, 2 usage / unreadable
+artifact.
 """
 from __future__ import annotations
 
@@ -35,7 +46,7 @@ import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 __all__ = ["load_artifact", "extract_metrics", "diff_metrics", "Regression",
-           "trend_report", "main"]
+           "trend_report", "is_count_metric", "main"]
 
 #: columns that identify a row / describe workload size — never scored
 SKIP_COLS = frozenset({
@@ -49,6 +60,16 @@ HIGHER_PATTERNS = ("per_doorbell", "per_s", "bandwidth", "gib",
 LOWER_PATTERNS = ("latency", "ttft", "overhead", "score", "objective",
                   "dispatch", "doorbell", "final_loss", "evicted",
                   "rejected", "dropped", "_us", "_ms", "us", "ms", "wall")
+
+
+#: deterministic command-stream *count* metrics: exact on any runner, so
+#: they gate hard even where timings are warn-only (``--gate-counts``)
+COUNT_PATTERNS = ("doorbell", "footprint", "command_bytes", "graph_launch",
+                  "rings", "spans", "payload_bytes", "evicted", "rejected",
+                  "dropped")
+#: anything matching these is a measured quantity, never a count
+_TIMING_HINTS = ("per_s", "bandwidth", "gib", "latency", "ttft", "wall",
+                 "_us", "_ms")
 
 
 def direction(col: str) -> Optional[str]:
@@ -65,6 +86,17 @@ def direction(col: str) -> Optional[str]:
     if c.endswith("_s"):
         return "lower"
     return None
+
+
+def is_count_metric(metric: str) -> bool:
+    """True for deterministic count metrics (doorbell counts, command
+    footprint bytes, tokens-per-doorbell): integer-exact on any runner, so
+    a regression there is real no matter how noisy the machine is."""
+    col = metric.rsplit("/", 1)[-1].lower()
+    if col.endswith(("_s", "_us", "_ms")) or any(h in col
+                                                 for h in _TIMING_HINTS):
+        return False
+    return any(p in col for p in COUNT_PATTERNS)
 
 
 def load_artifact(path: str) -> Dict[str, Any]:
@@ -255,7 +287,47 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="write the markdown trend report here")
     ap.add_argument("--warn-only", action="store_true",
                     help="report regressions but exit 0 (noisy runners)")
+    ap.add_argument("--gate-counts", action="store_true",
+                    help="deterministic count metrics (doorbells, command "
+                         "footprint) fail the run even under --warn-only")
+    ap.add_argument("--store", default="", metavar="KIND",
+                    help="diff the two newest records of KIND from the "
+                         "persistent metrics store instead of artifacts")
+    ap.add_argument("--store-root", default=None, metavar="DIR",
+                    help="metrics store root (default results/metrics or "
+                         "REPRO_METRICS_DIR)")
     args = ap.parse_args(argv)
+
+    if args.store:
+        if args.artifacts or args.baseline or args.candidate:
+            ap.error("--store replaces artifact arguments")
+        from .store import MetricsStore
+        store = MetricsStore(root=args.store_root)
+        recs = store.records(args.store)
+        if len(recs) < 2:
+            print(f"trajectory: need >= 2 stored {args.store!r} records "
+                  f"in {store.root}, have {len(recs)}")
+            return 2
+        base_r, cand_r = recs[-2], recs[-1]
+
+        def as_scored(rec) -> Dict[str, Tuple[float, str]]:
+            out: Dict[str, Tuple[float, str]] = {}
+            for k, v in rec.metrics.items():
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    continue
+                d = direction(k.rsplit("/", 1)[-1])
+                if d is not None:
+                    out[k] = (float(v), d)
+            return out
+
+        regs, imps, n = diff_metrics(as_scored(base_r), as_scored(cand_r),
+                                     threshold=args.threshold)
+        print(f"store {args.store!r}: {base_r.run_id} ({base_r.git_sha}) "
+              f"-> {cand_r.run_id} ({cand_r.git_sha}), "
+              f"{n} shared metrics")
+        for r in imps:
+            print(f"improvement {r.describe()}")
+        return _gate_exit(regs, args)
 
     paths = list(args.artifacts)
     if args.baseline or args.candidate:
@@ -279,15 +351,28 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         with open(args.report, "w") as f:
             f.write(md + "\n")
         print(f"wrote {args.report}")
+    return _gate_exit(gate_regs, args)
+
+
+def _gate_exit(gate_regs: List[Regression], args: argparse.Namespace) -> int:
+    """Shared verdict: print regressions, apply the warn-only/count split."""
+    count_regs = [r for r in gate_regs if is_count_metric(r.metric)]
     for r in gate_regs:
-        print(f"REGRESSION {r.describe()}")
-    if gate_regs:
-        print(f"trajectory: {len(gate_regs)} regression(s) beyond "
-              f"{args.threshold*100:.0f}% in the gate pair"
-              + (" [warn-only]" if args.warn_only else ""))
-        return 0 if args.warn_only else 1
-    print("trajectory: no regressions beyond threshold in the gate pair")
-    return 0
+        kind = "COUNT " if r in count_regs else ""
+        print(f"{kind}REGRESSION {r.describe()}")
+    if not gate_regs:
+        print("trajectory: no regressions beyond threshold in the gate pair")
+        return 0
+    enforced = (not args.warn_only) or (args.gate_counts
+                                        and bool(count_regs))
+    detail = ""
+    if args.warn_only:
+        detail = (f" [warn-only, but {len(count_regs)} deterministic "
+                  f"count regression(s) gate hard]"
+                  if enforced else " [warn-only]")
+    print(f"trajectory: {len(gate_regs)} regression(s) beyond "
+          f"{args.threshold*100:.0f}% in the gate pair{detail}")
+    return 1 if enforced else 0
 
 
 if __name__ == "__main__":

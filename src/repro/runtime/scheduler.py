@@ -54,6 +54,7 @@ class RequestTicket:
     t_first: float = -1.0            # first token harvested
     t_done: float = -1.0
     tokens: List[int] = dataclasses.field(default_factory=list)
+    n_launches: int = 0              # decode launches this request rode
 
     @property
     def uid(self) -> int:
@@ -83,6 +84,7 @@ class RequestTicket:
             "prompt_len": int(len(self.request.prompt)),
             "max_new_tokens": int(self.request.max_new_tokens),
             "n_tokens": len(self.tokens),
+            "n_launches": self.n_launches,
             "latency_s": self.latency_s, "ttft_s": self.ttft_s,
         }
 

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core.session import TraceSession
+from ..core.session import SpanHandle, TraceSession
 from ..models import get_model
 from .scheduler import AdmissionQueue, RequestTicket, latency_stats
 
@@ -136,23 +136,29 @@ class Server:
         # session may be shared with other consumers: report per-run deltas
         db0 = self.tracker.count
         ev0 = self.session.n_events
-        state, logits = self._prefill(self.params, jnp.asarray(toks))
-        nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
         max_new = max(r.max_new_tokens for r in requests)
-        out = [nxt[:, 0]]
-        produced = 1
-        while produced < max_new:
-            if self.T == 1:
-                state, logits = self._decode(self.params, state, nxt)
-                nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
-                out.append(nxt[:, 0])
-                produced += 1
-            else:
-                state, block, nxt = self._decode_block(
-                    state, nxt, max_new - produced)
-                out.extend(block)
-                produced += len(block)
-        jax.block_until_ready(out[-1])
+        with self.session.span("serve.oneshot", batch=len(requests),
+                               max_new=max_new):
+            with self.session.span("serve.prefill", seq_len=S):
+                state, logits = self._prefill(self.params, jnp.asarray(toks))
+            nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+            out = [nxt[:, 0]]
+            produced = 1
+            while produced < max_new:
+                with self.session.span("serve.decode_iter",
+                                       produced=produced):
+                    if self.T == 1:
+                        state, logits = self._decode(self.params, state, nxt)
+                        nxt = jnp.argmax(logits[:, -1:, :],
+                                         axis=-1).astype(jnp.int32)
+                        out.append(nxt[:, 0])
+                        produced += 1
+                    else:
+                        state, block, nxt = self._decode_block(
+                            state, nxt, max_new - produced)
+                        out.extend(block)
+                        produced += len(block)
+            jax.block_until_ready(out[-1])
         wall = time.perf_counter() - t0
         tokens = np.stack([np.asarray(t) for t in out], axis=1)  # [B, new]
         for i, r in enumerate(requests):
@@ -215,6 +221,11 @@ class ContinuousBatchingServer(Server):
         self.queue = AdmissionQueue(max_pending=max_pending, policy=admission)
         self.tickets: List[RequestTicket] = []      # submit order, all fates
         self._slot_tix: List[Optional[RequestTicket]] = [None] * self.B
+        # per-request causal spans: a request's lifetime crosses scheduler
+        # iterations (and the decode launch is shared by every active slot),
+        # so these are manual handles closed in _finish with *declared*
+        # attribution — n_launches decode launches + 1 prefill doorbell
+        self._req_spans: Dict[int, SpanHandle] = {}
 
         # live observability plane: every event the (possibly shared)
         # session emits while this engine exists also folds into an
@@ -267,11 +278,16 @@ class ContinuousBatchingServer(Server):
                 dropped.t_done = time.perf_counter()
                 self.session.emit("progress", "serve.evict",
                                   uid=dropped.uid, reason=dropped.reason)
+                self._end_request_span(dropped)
             if not accepted:
                 tix.status = "rejected"
                 tix.reason = ("intake_closed" if self.queue.closed
                               else "queue_full")
                 tix.t_done = time.perf_counter()
+            else:
+                self._req_spans[tix.uid] = self.session.start_span(
+                    "serve.request", uid=tix.uid,
+                    prompt_len=int(len(request.prompt)))
         self.tickets.append(tix)
         name = "serve.submit" if not tix.finished else "serve.reject"
         self.session.emit("progress", name, uid=tix.uid, status=tix.status,
@@ -324,6 +340,25 @@ class ContinuousBatchingServer(Server):
     def n_active(self) -> int:
         return sum(1 for t in self._slot_tix if t is not None)
 
+    def _end_request_span(self, tix: RequestTicket) -> None:
+        """Close a request's causal span with its declared attribution.
+
+        The vmapped decode launch is shared by every active slot, so this
+        request's share of the command stream can't be read off stamped
+        events — it is *declared* here instead: one doorbell per decode
+        launch the request rode (``n_launches``) plus its prefill, and
+        4 bytes per emitted token (matching the finish-event payload).
+        """
+        handle = self._req_spans.pop(tix.uid, None)
+        if handle is None:
+            return
+        launches = tix.n_launches
+        handle.end(uid=tix.uid, status=tix.status, slot=tix.slot,
+                   n_tokens=len(tix.tokens),
+                   doorbells=launches + (1 if tix.t_admit >= 0 else 0),
+                   graph_launches=launches,
+                   payload=4 * len(tix.tokens))
+
     def _admit(self) -> int:
         """Move queued tickets into free slots (prefill + install)."""
         admitted = 0
@@ -332,8 +367,11 @@ class ContinuousBatchingServer(Server):
             if tix is None:
                 break
             r = tix.request
-            state, logits = self._prefill(
-                self.params, jnp.asarray(np.asarray(r.prompt)[None, :]))
+            with self.session.span("serve.prefill", uid=tix.uid,
+                                   prompt_len=int(len(r.prompt))):
+                state, logits = self._prefill(
+                    self.params,
+                    jnp.asarray(np.asarray(r.prompt)[None, :]))
             tok0 = int(jnp.argmax(logits[0, -1, :]))
             self._slots = self._install(self._slots, state, np.int32(slot))
             self._nxt = self._nxt.at[slot, 0, 0].set(tok0)
@@ -365,6 +403,7 @@ class ContinuousBatchingServer(Server):
             payload_bytes=4 * len(tix.tokens), uid=tix.uid, slot=tix.slot,
             tokens=len(tix.tokens), latency_s=tix.latency_s,
             **({"reason": tix.reason} if evicted else {}))
+        self._end_request_span(tix)
 
     def step(self) -> bool:
         """One scheduler iteration: admit, then one decode launch across
@@ -372,17 +411,19 @@ class ContinuousBatchingServer(Server):
         self._admit()
         if self.n_active == 0:
             return False
-        self._slots, toks, self._nxt = self._decode_slots(
-            self.params, self._slots, self._nxt)
-        blocks = np.asarray(toks)                   # [B, T] host sync
-        for slot, tix in enumerate(self._slot_tix):
-            if tix is None:
-                continue
-            budget = min(tix.request.max_new_tokens, tix.cap)
-            take = min(self.T, budget - len(tix.tokens))
-            tix.tokens.extend(int(t) for t in blocks[slot, :take])
-            if len(tix.tokens) >= budget:
-                self._finish(tix)
+        with self.session.span("serve.decode_iter", active=self.n_active):
+            self._slots, toks, self._nxt = self._decode_slots(
+                self.params, self._slots, self._nxt)
+            blocks = np.asarray(toks)               # [B, T] host sync
+            for slot, tix in enumerate(self._slot_tix):
+                if tix is None:
+                    continue
+                tix.n_launches += 1
+                budget = min(tix.request.max_new_tokens, tix.cap)
+                take = min(self.T, budget - len(tix.tokens))
+                tix.tokens.extend(int(t) for t in blocks[slot, :take])
+                if len(tix.tokens) >= budget:
+                    self._finish(tix)
         return True
 
     def run(self, idle_timeout_s: float = 5.0,

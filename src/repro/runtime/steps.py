@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..configs.shapes import ShapeConfig
+from ..core.session import ambient_span
 from ..optim.adamw import AdamWState, adamw_init, adamw_update
 from ..optim.compression import ef_compress_update
 from ..optim.schedule import cosine_schedule
@@ -125,5 +126,8 @@ def init_all(model, cfg: ModelConfig, key: Optional[jax.Array] = None
              ) -> Tuple[Any, AdamWState]:
     """(params, opt_state) — run under ``jax.eval_shape`` for the dry-run."""
     key = jax.random.PRNGKey(0) if key is None else key
-    params = model.init_params(key)
-    return params, adamw_init(params)
+    # span only materialises when a TraceSession is ambient (the trainer
+    # activates its own); the dry-run path stays session-free
+    with ambient_span("steps.init_all"):
+        params = model.init_params(key)
+        return params, adamw_init(params)

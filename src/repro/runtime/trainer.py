@@ -73,7 +73,8 @@ class Trainer:
         self.metrics_log: list = []
 
         key = jax.random.PRNGKey(seed)
-        self.params, self.opt_state = init_all(self.model, cfg, key)
+        with self.session:          # make init_all's ambient_span land here
+            self.params, self.opt_state = init_all(self.model, cfg, key)
         self.ef_state = (ef_init(self.params)
                          if grad_compression == "int8" else None)
 
@@ -129,24 +130,30 @@ class Trainer:
         ev0 = self.session.n_events
         try:
             while self.step < num_steps:
-                if self.k == 1:
-                    _, batch = pipe.next()
-                    if self.ef_state is not None:
-                        (self.params, self.opt_state, metrics,
-                         self.ef_state) = self._jitted(
-                            self.params, self.opt_state, batch,
-                            self.ef_state)
+                # one span per optimiser iteration — covers data fetch, the
+                # (possibly K-step) launch, and the progress fence, so span
+                # attribution answers "what does one train step cost"
+                with self.session.span("train.step", step=self.step,
+                                       k=self.k):
+                    if self.k == 1:
+                        _, batch = pipe.next()
+                        if self.ef_state is not None:
+                            (self.params, self.opt_state, metrics,
+                             self.ef_state) = self._jitted(
+                                self.params, self.opt_state, batch,
+                                self.ef_state)
+                        else:
+                            (self.params, self.opt_state,
+                             metrics) = self._jitted(
+                                self.params, self.opt_state, batch)
+                        self.step += 1
                     else:
+                        batches = self._stack_batches(pipe, self.k)
                         self.params, self.opt_state, metrics = self._jitted(
-                            self.params, self.opt_state, batch)
-                    self.step += 1
-                else:
-                    batches = self._stack_batches(pipe, self.k)
-                    self.params, self.opt_state, metrics = self._jitted(
-                        self.params, self.opt_state, batches)
-                    self.step += self.k
-                tok = self.progress.release(metrics["loss"])
-                self.progress.wait(tok)                    # fence the launch
+                            self.params, self.opt_state, batches)
+                        self.step += self.k
+                    tok = self.progress.release(metrics["loss"])
+                    self.progress.wait(tok)                # fence the launch
                 self.monitor.step_completed(0)
                 loss = float(jnp.ravel(metrics["loss"])[-1])
                 self.metrics_log.append({"step": self.step, "loss": loss})

@@ -1,0 +1,392 @@
+"""Span attribution profiler: histograms, SpanProfile, export, store.
+
+Covers the causal-attribution pipeline end to end: LogHistogram percentile
+accuracy bounds, per-span-path command attribution (stamped roll-up +
+declared shares), survival of span identity through a JSONL round-trip and
+a cross-shard :func:`repro.obs.aggregate` merge, Chrome-trace/Perfetto
+export schema sanity, the persistent metrics store, and the trajectory
+gate's deterministic-count enforcement.
+"""
+import json
+import math
+import os
+import threading
+
+import pytest
+
+from repro.core import JsonlSink, TraceSession
+from repro.obs import LogHistogram, MetricsStore, SpanProfile, aggregate
+from repro.obs.export import export, to_chrome_trace
+from repro.obs.trajectory import is_count_metric
+
+
+# -- LogHistogram ------------------------------------------------------------
+
+def _exact_percentile(xs, p):
+    """Nearest-rank percentile on raw samples (the reference)."""
+    vals = sorted(xs)
+    rank = max(1, min(len(vals), math.ceil(p / 100.0 * len(vals))))
+    return vals[rank - 1]
+
+
+def test_log_histogram_percentile_error_bound():
+    """p50/p90/p99 within the documented sqrt(growth)-1 relative error of
+    the exact nearest-rank percentile, across 3 decades of dynamic range."""
+    import random
+    rng = random.Random(7)
+    growth = 1.15
+    bound = math.sqrt(growth) - 1.0 + 1e-9
+    h = LogHistogram(growth)
+    xs = [math.exp(rng.uniform(math.log(1e-4), math.log(1e-1)))
+          for _ in range(5000)]
+    for x in xs:
+        h.add(x)
+    assert h.n == 5000
+    for p in (50.0, 90.0, 99.0):
+        exact = _exact_percentile(xs, p)
+        got = h.percentile(p)
+        assert abs(got - exact) / exact <= bound, (p, got, exact)
+    assert h.min == min(xs) and h.max == max(xs)
+    assert h.mean == pytest.approx(sum(xs) / len(xs))
+
+
+def test_log_histogram_zero_and_negative_bucket():
+    h = LogHistogram()
+    for v in (0.0, -1.0, 0.0):
+        h.add(v)
+    assert h.percentile(50.0) <= 0.0          # clamped into observed range
+    h.add(5.0)
+    assert h.percentile(99.0) == pytest.approx(5.0, rel=math.sqrt(1.15) - 1)
+    # all-zero percentile is 0, not a stale +inf min
+    h2 = LogHistogram()
+    h2.add(0.0)
+    assert h2.percentile(50.0) == 0.0
+
+
+def test_log_histogram_merge_equals_combined_feed():
+    a, b, both = LogHistogram(), LogHistogram(), LogHistogram()
+    for i in range(1, 200):
+        v = 0.001 * i
+        (a if i % 2 else b).add(v)
+        both.add(v)
+    a.merge(b)
+    for p in (50.0, 90.0, 99.0):
+        assert a.percentile(p) == both.percentile(p)
+    assert a.n == both.n and a.total == pytest.approx(both.total)
+    other = LogHistogram(2.0)
+    other.add(1.0)                            # empty merges are always OK
+    with pytest.raises(ValueError, match="growth"):
+        a.merge(other)
+
+
+def test_log_histogram_dict_round_trip():
+    h = LogHistogram()
+    for v in (0.0, 1e-4, 3.7, 3.7, 120.0):
+        h.add(v)
+    h2 = LogHistogram.from_dict(json.loads(json.dumps(h.to_dict())))
+    assert h2.n == h.n and h2.min == h.min and h2.max == h.max
+    for p in (50.0, 99.0):
+        assert h2.percentile(p) == h.percentile(p)
+
+
+# -- span stamping + SpanProfile --------------------------------------------
+
+def _spanned_session(**session_kw):
+    """request > decode_iter nesting with stamped + declared attribution."""
+    sess = TraceSession("prof", **session_kw)
+    with sess.span("request", uid=1):
+        sess.emit("dispatch", "prefill", dur_s=1e-3, payload_bytes=100)
+        with sess.span("decode_iter"):
+            sess.emit("dispatch", "decode", dur_s=2e-3, payload_bytes=40)
+            sess.emit("graph_launch", "g", dur_s=1e-4)
+    h = sess.start_span("bg_request")         # manual, overlapping span
+    sess.emit("transfer", "weights", payload_bytes=999)  # NOT under bg span
+    h.end(doorbells=3, payload=12)            # declared share
+    return sess
+
+
+def test_span_profile_rollup_and_declared_attribution():
+    sess = _spanned_session()
+    prof = SpanProfile.from_events(sess.timeline())
+    spans = prof.snapshot()["spans"]
+    assert set(spans) == {"request", "request/decode_iter", "bg_request"}
+    # roll-up: the parent path sees nested dispatches + graph launch
+    req = spans["request"]
+    assert req["doorbells"] == 2              # prefill + decode
+    assert req["graph_launches"] == 1
+    assert req["payload_bytes"] == 140
+    inner = spans["request/decode_iter"]
+    assert inner["doorbells"] == 1 and inner["payload_bytes"] == 40
+    # declared-only manual span: nothing stamped, everything declared
+    bg = spans["bg_request"]
+    assert bg["doorbells"] == 3 and bg["payload_bytes"] == 12
+    assert bg["events"] == 0
+
+
+def test_span_profile_sink_equals_post_mortem():
+    live = SpanProfile()
+    sess = TraceSession("prof", sinks=[live])
+    with sess.span("step"):
+        sess.emit("dispatch", "d", dur_s=1e-3)
+    post = SpanProfile.from_events(sess.timeline())
+    assert live.snapshot()["spans"] == post.snapshot()["spans"]
+
+
+def test_span_profile_store_metrics_flat_ids():
+    sess = _spanned_session()
+    flat = SpanProfile.from_events(sess.timeline()).store_metrics()
+    assert flat["request/doorbells"] == 2.0
+    assert flat["request/decode_iter/payload_bytes"] == 40.0
+    assert "request/wall_s_p50" in flat
+    assert all(isinstance(v, float) for v in flat.values())
+
+
+def test_span_attribution_survives_jsonl_round_trip(tmp_path):
+    path = os.path.join(tmp_path, "trace.jsonl")
+    sess = _spanned_session(jsonl_path=path)
+    sess.close()
+    direct = SpanProfile.from_events(sess.timeline()).snapshot()["spans"]
+    loaded = SpanProfile.from_events(JsonlSink.load(path)).snapshot()["spans"]
+    assert loaded == direct
+
+
+def test_span_attribution_survives_aggregate_merge(tmp_path):
+    """Two shards reuse the same local span ids; the merged profile must
+    keep them apart (span identity is deduplicated per shard)."""
+    paths = []
+    for p in range(2):
+        path = os.path.join(tmp_path, f"trace.p{p}.jsonl")
+        sess = TraceSession("fleet", jsonl_path=path,
+                            tags={"host": "h", "process": p})
+        sess.barrier("sync")
+        with sess.span("request", uid=p):      # same local span_id on both
+            sess.emit("dispatch", "d", dur_s=1e-3, payload_bytes=10 + p)
+        sess.close()
+        paths.append(path)
+    merged = aggregate(paths)
+    spans = SpanProfile.from_events(merged.events).snapshot()["spans"]
+    req = spans["request"]
+    assert req["spans"] == 2                   # one per shard, not merged
+    assert req["doorbells"] == 2
+    assert req["payload_bytes"] == 21
+
+
+def test_span_profile_report_renders():
+    txt = SpanProfile.from_events(_spanned_session().timeline()).report()
+    assert "SPAN PROFILE" in txt and "request/decode_iter" in txt
+
+
+# -- contextvar span semantics ----------------------------------------------
+
+def test_span_nesting_stamps_path_and_ancestor_chain():
+    sess = TraceSession("nest")
+    with sess.span("a") as ha:
+        with sess.span("b") as hb:
+            e = sess.emit("dispatch", "d")
+    assert e.meta["span_path"] == "a/b"
+    assert e.meta["span_ids"] == [ha.span_id, hb.span_id]
+    assert e.meta["parent_span_id"] == ha.span_id
+    # span-end events carry their own identity and duration
+    ends = [x for x in sess.timeline() if x.name == "obs.span"]
+    assert [x.meta["span"] for x in ends] == ["b", "a"]
+    assert all(x.dur_s >= 0.0 for x in ends)
+
+
+def test_span_contextvar_isolated_across_threads():
+    """A thread's emits are stamped only with spans that thread opened."""
+    sess = TraceSession("threads")
+    seen = {}
+    go = threading.Barrier(2)
+
+    def worker(name):
+        go.wait()
+        with sess.span(name):
+            e = sess.emit("dispatch", f"d_{name}")
+        seen[name] = e.meta
+
+    ts = [threading.Thread(target=worker, args=(n,)) for n in ("t1", "t2")]
+    with sess.span("main_only"):
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        e_main = sess.emit("dispatch", "d_main")
+    assert e_main.meta["span_path"] == "main_only"
+    assert seen["t1"]["span_path"] == "t1"    # no main_only contamination
+    assert seen["t2"]["span_path"] == "t2"
+    assert seen["t1"]["span_id"] != seen["t2"]["span_id"]
+
+
+# -- Chrome-trace / Perfetto export -----------------------------------------
+
+def test_chrome_trace_schema_and_nesting():
+    sess = _spanned_session()
+    trace = to_chrome_trace(sess.timeline(), trace_name="t")
+    evs = trace["traceEvents"]
+    assert trace["displayTimeUnit"] == "ms"
+    assert trace["otherData"]["trace"] == "t"
+    phases = {e["ph"] for e in evs}
+    assert {"M", "X", "b", "e"} <= phases
+    for e in evs:                              # minimal per-event schema
+        assert {"ph", "pid", "tid"} <= set(e)
+        if e["ph"] in ("X", "b", "e", "i"):
+            assert "ts" in e and "name" in e
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0
+    # scoped spans are complete events that nest in time on one track
+    spans_x = [e for e in evs if e["ph"] == "X" and e.get("cat") == "span"]
+    by_name = {e["name"]: e for e in spans_x}
+    outer, inner = by_name["request"], by_name["decode_iter"]
+    assert outer["tid"] == inner["tid"]
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-6
+    # the manual overlapping span exports as an async begin/end pair
+    asyncs = [e for e in evs if e["ph"] in ("b", "e")]
+    assert {e["name"] for e in asyncs} == {"bg_request"}
+    b_ev = next(e for e in asyncs if e["ph"] == "b")
+    e_ev = next(e for e in asyncs if e["ph"] == "e")
+    assert b_ev["id"] == e_ev["id"] and b_ev["ts"] <= e_ev["ts"]
+    # non-span events ride per-kind named tracks
+    names = {e["args"]["name"] for e in evs if e["ph"] == "M"
+             and e["name"] == "thread_name"}
+    assert "dispatch" in names
+
+
+def test_chrome_trace_shards_become_processes(tmp_path):
+    paths = []
+    for p in range(2):
+        path = os.path.join(tmp_path, f"s.p{p}.jsonl")
+        sess = TraceSession("fleet", jsonl_path=path,
+                            tags={"host": "h", "process": p})
+        sess.barrier("sync")
+        with sess.span("request"):
+            sess.emit("dispatch", "d")
+        sess.close()
+        paths.append(path)
+    out = os.path.join(tmp_path, "perfetto.json")
+    trace = export(paths, out)
+    assert len(trace["otherData"]["shards"]) == 2
+    assert {e["pid"] for e in trace["traceEvents"]} == {0, 1}
+    with open(out) as f:                       # written file parses
+        assert json.load(f)["traceEvents"]
+    # timestamps never negative (Perfetto requirement after alignment)
+    assert all(e["ts"] >= 0.0 for e in trace["traceEvents"] if "ts" in e)
+
+
+def test_export_cli_single_shard(tmp_path, capsys):
+    from repro.obs.export import main
+    path = os.path.join(tmp_path, "t.jsonl")
+    sess = TraceSession("cli", jsonl_path=path)
+    with sess.span("request"):
+        sess.emit("dispatch", "d", dur_s=1e-3)
+    sess.close()
+    out = os.path.join(tmp_path, "out.json")
+    assert main([path, "-o", out]) == 0
+    assert "perfetto" in capsys.readouterr().out
+    assert json.load(open(out))["traceEvents"]
+
+
+# -- MetricsStore ------------------------------------------------------------
+
+def test_metrics_store_append_read_and_latest(tmp_path):
+    store = MetricsStore(root=str(tmp_path / "m"))
+    store.append("bench", {"x": 1.0}, run_id="r1", ts=10.0)
+    store.append("bench", {"x": 2.0}, run_id="r2", ts=20.0)
+    store.append("other", {"y": 5}, run_id="r1", ts=15.0)
+    assert store.kinds() == ["bench", "other"]
+    recs = store.records("bench")
+    assert [r.run_id for r in recs] == ["r1", "r2"]   # append order
+    assert recs[0].git_sha                            # stamped
+    assert store.latest("bench").metrics == {"x": 2.0}
+    assert [r.run_id for r in store.records("bench", since=15.0)] == ["r2"]
+    assert [r.run_id for r in store.records("bench", run_id="r1")] == ["r1"]
+
+
+def test_metrics_store_tolerates_truncated_trailing_line(tmp_path):
+    store = MetricsStore(root=str(tmp_path / "m"))
+    store.append("bench", {"x": 1.0}, run_id="r1")
+    with open(store._path("bench"), "a") as f:
+        f.write('{"run_id": "r2", "ts": 1.0, "kin')   # crashed writer
+    assert [r.run_id for r in store.records("bench")] == ["r1"]
+    # ...but corruption with valid records AFTER it still raises
+    with open(store._path("bench"), "a") as f:
+        f.write("\n")
+        f.write(json.dumps(store.append("bench", {"x": 3.0},
+                                        run_id="r3").to_dict()) + "\n")
+    with pytest.raises((json.JSONDecodeError, KeyError)):
+        store.records("bench")
+
+
+def test_metrics_store_trend_and_cli(tmp_path, capsys):
+    from repro.obs.store import main
+    root = str(tmp_path / "m")
+    store = MetricsStore(root=root)
+    store.append("loadtest", {"latency_p50_s": 0.2, "tokens_per_s": 500.0},
+                 run_id="r1", ts=100.0)
+    store.append("loadtest", {"latency_p50_s": 0.1, "tokens_per_s": 900.0},
+                 run_id="r2", ts=200.0)
+    table = store.trend("loadtest")
+    assert "latency_p50_s" in table and "r1" in table and "r2" in table
+    md = store.trend("loadtest", markdown=True)
+    assert md.startswith("| run_id |")
+    assert main(["--root", root, "list"]) == 0
+    assert "loadtest: 2 record(s)" in capsys.readouterr().out
+    assert main(["--root", root, "trend", "--kind", "loadtest"]) == 0
+    assert main(["--root", root, "show", "r1"]) == 0
+    assert main(["--root", root, "show", "nope"]) == 1
+
+
+# -- trajectory: count gating + store source --------------------------------
+
+def test_is_count_metric_split():
+    assert is_count_metric("graphs/name=replay/doorbells")
+    assert is_count_metric("serve.request/payload_bytes")
+    assert is_count_metric("loadtest/mode=cb_T4/tok_per_doorbell")
+    assert not is_count_metric("loadtest/mode=cb_T4/p50_ms")
+    assert not is_count_metric("session/total_dispatch_s")
+    assert not is_count_metric("dma/name=inline/bandwidth_gib_s")
+
+
+def _bench_artifact(path, doorbells, us):
+    art = {"pr": 1, "quick": True,
+           "sections": {"graphs": {"title": "g", "header": [],
+                        "rows": [{"name": "replay", "chain_len": 8,
+                                  "doorbells": doorbells,
+                                  "launch_us": us}]}}}
+    with open(path, "w") as f:
+        json.dump(art, f)
+    return str(path)
+
+
+def test_trajectory_gate_counts_enforces_under_warn_only(tmp_path):
+    from repro.obs.trajectory import main
+    base = _bench_artifact(tmp_path / "BENCH_1.json", doorbells=8, us=100.0)
+    # timing-only regression: warn-only stays green even with --gate-counts
+    cand_t = _bench_artifact(tmp_path / "BENCH_2.json", doorbells=8,
+                             us=500.0)
+    assert main(["--baseline", base, "--candidate", cand_t,
+                 "--warn-only", "--gate-counts"]) == 0
+    # count regression: --gate-counts turns warn-only red...
+    cand_c = _bench_artifact(tmp_path / "BENCH_3.json", doorbells=80,
+                             us=100.0)
+    assert main(["--baseline", base, "--candidate", cand_c,
+                 "--warn-only", "--gate-counts"]) == 1
+    # ...while plain --warn-only still waves it through
+    assert main(["--baseline", base, "--candidate", cand_c,
+                 "--warn-only"]) == 0
+
+
+def test_trajectory_store_mode(tmp_path, capsys):
+    from repro.obs.trajectory import main
+    root = str(tmp_path / "m")
+    store = MetricsStore(root=root)
+    store.append("loadtest", {"doorbells": 10, "latency_p50_s": 0.1},
+                 run_id="old")
+    store.append("loadtest", {"doorbells": 30, "latency_p50_s": 0.1},
+                 run_id="new")
+    assert main(["--store", "loadtest", "--store-root", root]) == 1
+    out = capsys.readouterr().out
+    assert "COUNT REGRESSION" in out and "doorbells" in out
+    assert main(["--store", "loadtest", "--store-root", root,
+                 "--warn-only"]) == 0
+    assert main(["--store", "missing", "--store-root", root]) == 2

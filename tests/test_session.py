@@ -387,3 +387,29 @@ def test_jsonl_sink_shared_across_sessions_single_file_handle(tmp_path):
         t.join()
     sink.close()
     assert len(JsonlSink.load(str(path))) == 200
+
+
+def test_jsonl_load_skips_hand_truncated_trailing_line(tmp_path):
+    """A shard whose last line was cut mid-write (killed process) still
+    loads: every complete line parses, the partial one is skipped with a
+    warning.  Corruption *before* valid lines is a broken file and raises.
+    """
+    path = tmp_path / "crashed.jsonl"
+    with TraceSession("victim", jsonl_path=str(path)) as sess:
+        for i in range(5):
+            sess.emit("dispatch", f"d{i}", payload_bytes=8 * i)
+    full = path.read_text()
+    lines = full.splitlines(keepends=True)
+    # chop the final record in half, as a SIGKILL mid-fwrite would
+    path.write_text("".join(lines[:-1]) + lines[-1][: len(lines[-1]) // 2])
+
+    with pytest.warns(RuntimeWarning, match="truncated trailing line"):
+        loaded = JsonlSink.load(str(path))
+    assert [e.name for e in loaded] == [f"d{i}" for i in range(4)]
+    assert all(e.payload_bytes == 8 * e.seq for e in loaded)
+
+    # same half-line *followed by* valid records is not a crash artifact
+    path.write_text("".join(lines[:3])
+                    + lines[3][: len(lines[3]) // 2] + "\n" + lines[4])
+    with pytest.raises((json.JSONDecodeError, KeyError, ValueError)):
+        JsonlSink.load(str(path))
