@@ -1,0 +1,58 @@
+"""Dense vs paged KV backends under shared-prefix serving traffic.
+
+The serving memory path is where the paper's small-submission regime meets
+capacity management: the paged backend trades the dense per-slot KV arena
+for fixed-size pages with per-slot block tables, which lets requests that
+share a prompt prefix share the pages holding it.  This section replays
+the same seeded shared-prefix workload (every prompt opens with the same
+24 tokens — system-prompt traffic) through both backends with chunked
+prefill and reports the command-stream footprint: prefill doorbells,
+prefill payload bytes, page-pool occupancy, and prefix-hit reuse.
+
+The workload size is FIXED regardless of ``--quick`` so the trajectory
+gate can diff these rows between the committed full baseline and the
+quick CI candidate — the count metrics here (doorbells, payload bytes,
+pages, prefix hits) are deterministic per seed and gate hard via
+``--gate-counts``; mismatched sizes would make the row keys disjoint and
+silently ungate the section.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core import TraceSession
+
+HEADER = ("mode,requests,new_tokens,prefill_doorbells,"
+          "prefill_payload_bytes,pages_allocated,pages_peak,pages_reused,"
+          "prefix_hits,doorbells,tok_per_doorbell")
+
+
+def run(arch: str = "gemma-2b", quick: bool = False,
+        session: Optional[TraceSession] = None) -> List[str]:
+    from repro.configs import SMOKE_ARCHS
+    from repro.runtime.server import ContinuousBatchingServer
+    from repro.runtime.traffic import TrafficSpec, generate, replay
+
+    cfg = SMOKE_ARCHS[arch]
+    # fixed size in quick AND full: see module docstring
+    spec = TrafficSpec(n_requests=8, rate=1000.0, prompt_lens=(4, 8),
+                       new_tokens=(5, 9), seed=0, prefix_len=24)
+    modes = (
+        ("dense_chunk8", dict(kv="dense", prefill_chunk=8)),
+        ("paged_pt8_chunk8", dict(kv="paged", kv_page_tokens=8,
+                                  prefill_chunk=8)),
+    )
+    rows: List[str] = []
+    for mode, kw in modes:
+        eng = ContinuousBatchingServer(
+            cfg, batch_size=4, max_seq=64, tokens_per_launch=4,
+            seed=0, session=session, **kw)
+        _, m = replay(eng, generate(spec, cfg.vocab_size), realtime=False)
+        kv = m["kv"]
+        rows.append(
+            f"{mode},{m['requests']},{m['new_tokens']},"
+            f"{kv['prefill_launches']},{kv['prefill_payload_bytes']},"
+            f"{kv.get('pages_allocated', 0)},{kv.get('pages_peak', 0)},"
+            f"{kv.get('pages_reused', 0)},{kv.get('prefix_hits', 0)},"
+            f"{m['doorbells']},{m['tokens_per_doorbell']:.2f}")
+    return rows

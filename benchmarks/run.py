@@ -5,10 +5,11 @@
   bench_submission — §6.2/§7 (stage decomposition, multi-step economy)
   bench_policy     — tuned-policy before/after (python -m repro.tune)
   bench_loadtest   — continuous-batching serve under Poisson traffic
+  bench_kv         — dense vs paged KV backends on shared-prefix traffic
   bench_kernels    — per-kernel interpret-mode sanity timings
 
 Prints ``name,value...`` CSV blocks (unchanged), and additionally writes a
-machine-readable artifact (``--out``, default ``BENCH_9.json``) recording
+machine-readable artifact (``--out``, default ``BENCH_10.json``) recording
 section -> rows (typed by the section header), the unified TraceSession
 summary, and the active tuned policy with its before/after objective — one
 point of the ROADMAP's perf trajectory, regenerated per PR and gated in CI
@@ -25,7 +26,7 @@ ambient session and passed explicitly where a section builds its own objects
 — so the final block is the unified, submission-ordered event summary across
 DMA, graph-launch, trainer, and policy benchmarks.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--out BENCH_9.json]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--out BENCH_10.json]
 """
 from __future__ import annotations
 
@@ -35,7 +36,7 @@ import sys
 import time
 from typing import Any, Dict, List
 
-PR_NUMBER = 9
+PR_NUMBER = 10
 
 
 def _parse_cell(v: str) -> Any:
@@ -101,8 +102,8 @@ def main() -> None:
     from repro.core import TraceSession
     from repro.tune.policy import load_policy
 
-    from . import (bench_dma, bench_graphs, bench_loadtest, bench_policy,
-                   bench_submission)
+    from . import (bench_dma, bench_graphs, bench_kv, bench_loadtest,
+                   bench_policy, bench_submission)
 
     sections: Dict[str, Dict[str, Any]] = {}
 
@@ -132,6 +133,10 @@ def main() -> None:
                  bench_loadtest.HEADER,
                  bench_loadtest.run(arch=args.arch, quick=args.quick,
                                     session=sess))
+        _section("kv", "KV backends: dense vs paged (shared-prefix)",
+                 bench_kv.HEADER,
+                 bench_kv.run(arch=args.arch, quick=args.quick,
+                              session=sess))
         _section("kernels", "Kernel interpret-mode timings", "name,ms",
                  bench_kernels_rows())
     summary = sess.summary()

@@ -68,6 +68,26 @@ def main(argv=None) -> int:
     ap.add_argument("--max-pending", type=int, default=256)
     ap.add_argument("--admission", default="reject",
                     choices=("reject", "drop_oldest"))
+    ap.add_argument("--kv", default="dense", choices=("dense", "paged"),
+                    help="KV-cache backend (paged adds block tables + "
+                         "shared-prefix page reuse)")
+    ap.add_argument("--kv-page-tokens", type=int, default=None,
+                    help="paged backend page size in tokens "
+                         "(unset -> tuned policy, fallback 16)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="paged pool size in pages (unset -> every slot "
+                         "fully grown: exhaustion impossible)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="max tokens per prefill launch; longer prompts "
+                         "are chunked and interleaved with decode iters "
+                         "(unset -> tuned policy, fallback 0 = off)")
+    ap.add_argument("--sched", default="fifo",
+                    choices=("fifo", "priority", "fair"),
+                    help="admission scheduling policy")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="shared seeded prefix tokens on every prompt "
+                         "(system-prompt traffic; exercises paged "
+                         "prefix reuse)")
     ap.add_argument("--requests", type=int, default=128)
     ap.add_argument("--rate", type=float, default=100.0,
                     help="mean Poisson arrival rate, requests/s")
@@ -117,7 +137,8 @@ def main(argv=None) -> int:
     cfg = (ARCHS if args.full else SMOKE_ARCHS)[args.arch]
     spec = TrafficSpec(n_requests=args.requests, rate=args.rate,
                        prompt_lens=args.prompt_lens,
-                       new_tokens=args.new_tokens, seed=args.seed)
+                       new_tokens=args.new_tokens, seed=args.seed,
+                       prefix_len=args.prefix_len)
     arrivals = generate(spec, vocab_size=cfg.vocab_size)
 
     # per-span causal attribution rides every run: feeds the report, the
@@ -141,7 +162,9 @@ def main(argv=None) -> int:
             cfg, batch_size=args.batch, max_seq=args.max_seq,
             tokens_per_launch=args.tokens_per_launch, seed=args.seed,
             session=sess, max_pending=args.max_pending,
-            admission=args.admission)
+            admission=args.admission, kv=args.kv,
+            kv_page_tokens=args.kv_page_tokens, kv_pages=args.kv_pages,
+            prefill_chunk=args.prefill_chunk, sched=args.sched)
         live_srv = None
         if args.live is not None:
             live_srv = eng.start_live_endpoint(port=args.live)
@@ -150,7 +173,8 @@ def main(argv=None) -> int:
         sess.barrier("loadtest.start")
         print(f"loadtest: arch={cfg.name} slots={args.batch} T={eng.T} "
               f"requests={spec.n_requests} rate={spec.rate}/s "
-              f"realtime={args.realtime} admission={args.admission}")
+              f"realtime={args.realtime} admission={args.admission} "
+              f"kv={eng.kv.name} chunk={eng.kv.chunk} sched={args.sched}")
         try:
             tickets, metrics = replay(eng, arrivals, realtime=args.realtime,
                                       speed=args.speed)
@@ -171,6 +195,14 @@ def main(argv=None) -> int:
           f"tokens/doorbell={metrics['tokens_per_doorbell']:.2f} "
           f"({metrics['new_tokens']} tokens / {metrics['doorbells']} "
           f"doorbells)")
+    kv = metrics["kv"]
+    print(f"kv[{kv['backend']}] prefill launches={kv['prefill_launches']} "
+          f"payload={kv['prefill_payload_bytes']}B "
+          f"chunked={kv['chunked_prompts']}"
+          + (f"  pages peak={kv['pages_peak']}/{kv['pages_total']} "
+             f"reused={kv['pages_reused']} "
+             f"prefix_hits={kv['prefix_hits']}"
+             if kv["backend"] == "paged" else ""))
     req_attr = prof.path("serve.request")
     if req_attr:
         db, wall = req_attr["doorbells_per_span"], req_attr["wall_s"]
@@ -208,7 +240,12 @@ def main(argv=None) -> int:
                        "max_seq": args.max_seq,
                        "max_pending": args.max_pending,
                        "admission": args.admission,
-                       "realtime": args.realtime},
+                       "realtime": args.realtime,
+                       "sched": args.sched},
+            # KV backend footprint: prefill launches/payload, page pool
+            # occupancy, prefix-hit reuse — the dense-vs-paged comparison
+            # the README table and BENCH kv section are built from
+            "kv": metrics["kv"],
             "traffic": spec.to_dict(),
             "metrics": metrics,
             "session_summary": summary,

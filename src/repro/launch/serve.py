@@ -41,6 +41,16 @@ def main() -> None:
                          "(python -m repro.tune), else 4")
     ap.add_argument("--continuous", action="store_true",
                     help="serve through the continuous-batching engine")
+    ap.add_argument("--kv", default="dense", choices=("dense", "paged"),
+                    help="with --continuous: KV-cache backend")
+    ap.add_argument("--kv-page-tokens", type=int, default=None,
+                    help="paged page size in tokens (unset -> tuned/16)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="max tokens per prefill launch (unset -> "
+                         "tuned/off)")
+    ap.add_argument("--sched", default="fifo",
+                    choices=("fifo", "priority", "fair"),
+                    help="with --continuous: admission scheduling policy")
     ap.add_argument("--requests", type=int, default=None,
                     help="request count for --continuous (default: batch)")
     ap.add_argument("--live", type=int, default=None, nargs="?", const=0,
@@ -65,9 +75,15 @@ def main() -> None:
         from ..obs.profile import SpanProfile
         prof = SpanProfile(name="serve")
         session.add_sink(prof)
-    cls = ContinuousBatchingServer if args.continuous else Server
-    srv = cls(cfg, batch_size=args.batch, max_seq=args.max_seq,
-              tokens_per_launch=tpl, seed=args.seed, session=session)
+    if args.continuous:
+        srv = ContinuousBatchingServer(
+            cfg, batch_size=args.batch, max_seq=args.max_seq,
+            tokens_per_launch=tpl, seed=args.seed, session=session,
+            kv=args.kv, kv_page_tokens=args.kv_page_tokens,
+            prefill_chunk=args.prefill_chunk, sched=args.sched)
+    else:
+        srv = Server(cfg, batch_size=args.batch, max_seq=args.max_seq,
+                     tokens_per_launch=tpl, seed=args.seed, session=session)
     if srv.policy is not None:
         print(f"policy: {srv.policy.arch} knobs={srv.policy.knobs} "
               f"objective={srv.policy.objective.get('after')}")

@@ -16,7 +16,8 @@ from ..configs.base import ModelConfig
 from .layers import Params, apply_rope, init_rms_norm, rms_norm, rotary
 
 __all__ = ["init_attention", "attention", "decode_attention", "init_kv_cache",
-           "chunked_causal_attention", "dense_causal_attention"]
+           "chunked_causal_attention", "dense_causal_attention",
+           "extend_attention", "gather_block_table", "scatter_block_rows"]
 
 
 def init_attention(key: jax.Array, cfg: ModelConfig, dtype) -> Params:
@@ -284,3 +285,88 @@ def decode_attention(p: Params, cfg: ModelConfig, x: jax.Array,
     out = jnp.einsum("bgrs,bsgd->bgrd", probs.astype(v_cache.dtype), v_cache)
     out = out.reshape(B, 1, h, hd)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), k_cache, v_cache
+
+
+def extend_attention(p: Params, cfg: ModelConfig, x: jax.Array,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     start: jax.Array,
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prompt-chunk attention against a cache (chunked prefill).
+
+    x: [B, C, D] — C new prompt positions starting at global position
+    ``start`` ([] int32); k_cache/v_cache: [B, S_max, Hkv, hd] holding the
+    first ``start`` positions.  The chunk's K/V are written at
+    [start, start+C) and the chunk queries attend causally over the whole
+    buffer (future positions hold zeros and are masked to exactly-zero
+    softmax weight, so results are bit-identical to whole-prompt prefill).
+    Returns (out [B,C,D], new_k_cache, new_v_cache).
+    """
+    B, C, D = x.shape
+    h, hk, hd = cfg.n_heads_padded, cfg.n_kv_heads, cfg.hd
+    S = k_cache.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q)
+        k_new = rms_norm(p["k_norm"], k_new)
+    if cfg.pos_embed == "rope":
+        pos = start + jnp.arange(C)[None, :]
+        sin, cos = rotary(pos, hd, cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        k_new = apply_rope(k_new, sin, cos)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, start, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, start, 0, 0))
+    n_rep = h // hk
+    k_r = _repeat_kv(k_cache, n_rep)
+    v_r = _repeat_kv(v_cache, n_rep)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k_r).astype(jnp.float32) * scale
+    q_pos = start + jnp.arange(C)
+    mask = jnp.arange(S)[None, :] <= q_pos[:, None]
+    scores = jnp.where(mask[None, None], scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v_r)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# paged KV: block-table gather / scatter
+# --------------------------------------------------------------------------
+def gather_block_table(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Gather one slot's pages into a contiguous batch-1 cache.
+
+    pool: [L, P, page_tokens, Hkv, hd]; table: [n_blk] int32 physical page
+    ids.  Returns [L, 1, n_blk*page_tokens, Hkv, hd] — the same layout the
+    dense decode path uses, so the decode math downstream is shared (and
+    bit-identical) between backends.
+    """
+    L, P, pt, Hk, hd = pool.shape
+    g = pool[:, table]  # [L, n_blk, pt, Hk, hd]
+    return g.reshape(L, 1, table.shape[0] * pt, Hk, hd)
+
+
+def scatter_block_rows(pool: jax.Array, table: jax.Array, rows: jax.Array,
+                       start: jax.Array) -> jax.Array:
+    """Write ``rows`` [L, n, Hkv, hd] at logical positions start..start+n-1.
+
+    Positions are clamped exactly the way ``dynamic_update_slice`` clamps the
+    dense cache write (overshoot past max_seq lands in the final page), so a
+    request finishing at the KV cap behaves identically to dense.
+    """
+    L, P, pt, Hk, hd = pool.shape
+    n_blk = table.shape[0]
+    n = rows.shape[1]
+    S = n_blk * pt
+
+    def body(t, pool):
+        pos = jnp.minimum(start + t, S - 1)
+        page = table[jnp.minimum(pos // pt, n_blk - 1)]
+        off = pos % pt
+        row = jax.lax.dynamic_slice(rows, (0, t, 0, 0), (L, 1, Hk, hd))
+        return jax.lax.dynamic_update_slice(
+            pool, row[:, None].astype(pool.dtype), (0, page, off, 0, 0))
+
+    return jax.lax.fori_loop(0, n, body, pool)

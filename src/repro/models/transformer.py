@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from .attention import (attention, decode_attention, init_attention,
-                        init_kv_cache)
+from .attention import (attention, decode_attention, extend_attention,
+                        init_attention, init_kv_cache)
 from .layers import (Params, cross_entropy_loss, dtype_of, embed,
                      init_embedding, init_mlp, init_rms_norm, mlp, rms_norm,
                      unembed)
@@ -56,6 +56,20 @@ def block_decode(p: Params, cfg: ModelConfig, x: jax.Array,
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     a, k_cache, v_cache = decode_attention(
         p["attn"], cfg, rms_norm(p["ln1"], x), k_cache, v_cache, length)
+    x = x + a
+    h = rms_norm(p["ln2"], x)
+    if cfg.n_experts:
+        m, _ = moe_block(p["moe"], cfg, h)
+    else:
+        m = mlp(p["mlp"], h, cfg.act)
+    return x + m, k_cache, v_cache
+
+
+def block_extend(p: Params, cfg: ModelConfig, x: jax.Array,
+                 k_cache: jax.Array, v_cache: jax.Array, start: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    a, k_cache, v_cache = extend_attention(
+        p["attn"], cfg, rms_norm(p["ln1"], x), k_cache, v_cache, start)
     x = x + a
     h = rms_norm(p["ln2"], x)
     if cfg.n_experts:
@@ -158,6 +172,32 @@ class TransformerLM:
             state["v"], vs.astype(state["v"].dtype), (0, 0, 0, 0, 0))
         state["length"] = jnp.asarray(S, jnp.int32)
         return state, logits
+
+    def prefill_extend(self, params: Params, state: Params, tokens: jax.Array
+                       ) -> Tuple[Params, jax.Array]:
+        """Extend a decode state by one prompt chunk (chunked prefill).
+
+        tokens: [B, C] prompt positions state["length"]..length+C-1.  Returns
+        (new state, logits at the chunk's last position).  Chaining chunks is
+        bit-identical to a single whole-prompt ``prefill`` (future cache
+        positions are zero and masked to exactly-zero attention weight).
+        """
+        cfg = self.cfg
+        x = embed(params["emb"], tokens, cfg.embed_scale)
+        start = state["length"]
+
+        def scan_fn(carry, inp):
+            lp, kc, vc = inp
+            y, kc, vc = block_extend(lp, cfg, carry, kc, vc, start)
+            return y, (kc, vc)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            scan_fn, x, (params["layers"], state["k"], state["v"]))
+        x = rms_norm(params["final_norm"], x)
+        logits = unembed(params["emb"], x[:, -1:, :])
+        new_state = {"k": new_k, "v": new_v,
+                     "length": start + jnp.asarray(tokens.shape[1], jnp.int32)}
+        return new_state, logits
 
     def decode_step(self, params: Params, state: Params, tokens: jax.Array
                     ) -> Tuple[Params, jax.Array]:

@@ -55,18 +55,22 @@ SKIP_COLS = frozenset({
     "tokens_per_launch", "n",
 })
 #: substring patterns, checked before the lower-is-better ones
+#: ("prefix_hit"/"reused" must win over "pages"/"payload" below: prefix
+#: hits and reused pages are the paged-KV savings, more is better)
 HIGHER_PATTERNS = ("per_doorbell", "per_s", "bandwidth", "gib",
-                   "improvement", "completed", "throughput")
+                   "improvement", "completed", "throughput",
+                   "prefix_hit", "reused")
 LOWER_PATTERNS = ("latency", "ttft", "overhead", "score", "objective",
                   "dispatch", "doorbell", "final_loss", "evicted",
-                  "rejected", "dropped", "_us", "_ms", "us", "ms", "wall")
+                  "rejected", "dropped", "payload", "pages",
+                  "_us", "_ms", "us", "ms", "wall")
 
 
 #: deterministic command-stream *count* metrics: exact on any runner, so
 #: they gate hard even where timings are warn-only (``--gate-counts``)
 COUNT_PATTERNS = ("doorbell", "footprint", "command_bytes", "graph_launch",
                   "rings", "spans", "payload_bytes", "evicted", "rejected",
-                  "dropped")
+                  "dropped", "prefix_hit", "pages")
 #: anything matching these is a measured quantity, never a count
 _TIMING_HINTS = ("per_s", "bandwidth", "gib", "latency", "ttft", "wall",
                  "_us", "_ms")

@@ -28,7 +28,9 @@ from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import collections
 
-__all__ = ["RequestTicket", "AdmissionQueue", "percentile", "latency_stats"]
+__all__ = ["RequestTicket", "AdmissionQueue", "SchedulerPolicy",
+           "FifoPolicy", "PriorityPolicy", "FairSharePolicy", "make_policy",
+           "SCHED_POLICIES", "percentile", "latency_stats"]
 
 #: terminal ticket states
 FINISHED = ("done", "evicted", "rejected")
@@ -55,6 +57,7 @@ class RequestTicket:
     t_done: float = -1.0
     tokens: List[int] = dataclasses.field(default_factory=list)
     n_launches: int = 0              # decode launches this request rode
+    n_prefill_launches: int = 0      # prefill/extend launches (chunks)
 
     @property
     def uid(self) -> int:
@@ -85,8 +88,90 @@ class RequestTicket:
             "max_new_tokens": int(self.request.max_new_tokens),
             "n_tokens": len(self.tokens),
             "n_launches": self.n_launches,
+            "n_prefill_launches": self.n_prefill_launches,
             "latency_s": self.latency_s, "ttft_s": self.ttft_s,
         }
+
+
+class SchedulerPolicy:
+    """Chooses which queued ticket is admitted next.
+
+    ``select`` receives a snapshot of the queued tickets (FIFO order) and
+    returns the index to admit.  ``note_admitted`` is called with the ticket
+    actually removed, so stateful policies (fair-share) can account for it.
+    Policies never mutate the queue — :meth:`AdmissionQueue.pop` does the
+    removal under its own lock.
+    """
+
+    name = "fifo"
+
+    def select(self, queued: Sequence["RequestTicket"]) -> int:
+        return 0
+
+    def note_admitted(self, ticket: "RequestTicket") -> None:
+        pass
+
+
+class FifoPolicy(SchedulerPolicy):
+    """Strict arrival order — the pre-policy behavior."""
+
+    name = "fifo"
+
+
+class PriorityPolicy(SchedulerPolicy):
+    """Highest ``Request.priority`` first; FIFO among equals."""
+
+    name = "priority"
+
+    def select(self, queued: Sequence["RequestTicket"]) -> int:
+        best, best_p = 0, None
+        for i, t in enumerate(queued):
+            p = int(getattr(t.request, "priority", 0))
+            if best_p is None or p > best_p:
+                best, best_p = i, p
+        return best
+
+
+class FairSharePolicy(SchedulerPolicy):
+    """Least-served ``Request.user`` first; FIFO within a user.
+
+    "Served" is the decode-token budget admitted so far, so a user
+    submitting a few huge requests does not starve one submitting many
+    small ones.
+    """
+
+    name = "fair"
+
+    def __init__(self) -> None:
+        self._served: Dict[str, int] = {}
+
+    def select(self, queued: Sequence["RequestTicket"]) -> int:
+        best, best_cost = 0, None
+        for i, t in enumerate(queued):
+            user = str(getattr(t.request, "user", ""))
+            cost = self._served.get(user, 0)
+            if best_cost is None or cost < best_cost:
+                best, best_cost = i, cost
+        return best
+
+    def note_admitted(self, ticket: "RequestTicket") -> None:
+        user = str(getattr(ticket.request, "user", ""))
+        cost = int(getattr(ticket.request, "max_new_tokens", 1))
+        self._served[user] = self._served.get(user, 0) + cost
+
+
+SCHED_POLICIES = ("fifo", "priority", "fair")
+
+
+def make_policy(name: str) -> SchedulerPolicy:
+    if name == "fifo":
+        return FifoPolicy()
+    if name == "priority":
+        return PriorityPolicy()
+    if name == "fair":
+        return FairSharePolicy()
+    raise ValueError(f"unknown scheduler policy {name!r}; "
+                     f"expected one of {SCHED_POLICIES}")
 
 
 class AdmissionQueue:
@@ -114,6 +199,9 @@ class AdmissionQueue:
         self.policy = policy
         self._q: Deque[RequestTicket] = collections.deque()
         self._lock = threading.Lock()
+        # wakes the engine's drain loop on submit/close so run() blocks on
+        # this instead of spinning on poll_s (which stays as the fallback)
+        self._cv = threading.Condition(self._lock)
         self._closed = False
         self.n_submitted = 0
         self.n_refused = 0
@@ -140,15 +228,62 @@ class AdmissionQueue:
                 self.n_dropped += 1
             self._q.append(ticket)
             self.n_submitted += 1
+            self._cv.notify_all()
             return True, dropped
 
-    def pop(self) -> Optional[RequestTicket]:
+    def pop(self, policy: Optional["SchedulerPolicy"] = None
+            ) -> Optional[RequestTicket]:
+        """Remove and return the next ticket per ``policy`` (default FIFO).
+
+        The policy sees an immutable snapshot and returns an index; removal
+        happens here, under the queue lock, so policies can reorder without
+        reaching into ``_q`` (and ``drop_oldest`` semantics in
+        :meth:`submit` are untouched — overflow always drops the *oldest*
+        queued ticket regardless of admission order).
+        """
         with self._lock:
-            return self._q.popleft() if self._q else None
+            if not self._q:
+                return None
+            i = 0
+            if policy is not None:
+                i = int(policy.select(tuple(self._q)))
+                if not 0 <= i < len(self._q):
+                    i = 0
+            t = self._q[i]
+            del self._q[i]
+        if policy is not None:
+            policy.note_admitted(t)
+        return t
+
+    def peek(self, policy: Optional["SchedulerPolicy"] = None
+             ) -> Optional[RequestTicket]:
+        """The ticket :meth:`pop` would return, without removing it."""
+        with self._lock:
+            if not self._q:
+                return None
+            i = 0
+            if policy is not None:
+                i = int(policy.select(tuple(self._q)))
+                if not 0 <= i < len(self._q):
+                    i = 0
+            return self._q[i]
+
+    def wait_for_work(self, timeout: float) -> bool:
+        """Block until a ticket is queued or intake closes (or timeout).
+
+        Returns True if there is something to look at.  This is what lets
+        the engine's drain loop sleep instead of busy-polling.
+        """
+        with self._lock:
+            if self._q or self._closed:
+                return True
+            self._cv.wait(timeout=max(0.0, timeout))
+            return bool(self._q) or self._closed
 
     def close(self) -> None:
         with self._lock:
             self._closed = True
+            self._cv.notify_all()
 
     @property
     def closed(self) -> bool:

@@ -33,7 +33,8 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.session import SpanHandle, TraceSession
 from ..models import get_model
-from .scheduler import AdmissionQueue, RequestTicket, latency_stats
+from .scheduler import (AdmissionQueue, RequestTicket, latency_stats,
+                        make_policy)
 
 __all__ = ["Server", "Request", "ContinuousBatchingServer"]
 
@@ -44,6 +45,8 @@ class Request:
     prompt: np.ndarray          # [S] int32
     max_new_tokens: int = 16
     tokens: Optional[List[int]] = None
+    priority: int = 0           # PriorityPolicy: higher admits first
+    user: str = ""              # FairSharePolicy: least-served user first
 
 
 def _empty_metrics() -> Dict[str, Any]:
@@ -214,17 +217,25 @@ class ContinuousBatchingServer(Server):
                  tokens_per_launch: Optional[int] = None, seed: int = 0,
                  session: Optional[TraceSession] = None,
                  max_pending: int = 256,
-                 admission: str = "reject") -> None:
+                 admission: str = "reject",
+                 kv: str = "dense",
+                 kv_page_tokens: Optional[int] = None,
+                 kv_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 sched: str = "fifo") -> None:
         super().__init__(cfg, batch_size, max_seq,
                          tokens_per_launch=tokens_per_launch, seed=seed,
                          session=session)
         self.queue = AdmissionQueue(max_pending=max_pending, policy=admission)
+        self.sched_policy = make_policy(sched)
         self.tickets: List[RequestTicket] = []      # submit order, all fates
         self._slot_tix: List[Optional[RequestTicket]] = [None] * self.B
+        self._prefilling: set = set()               # slots mid-chunked-prefill
+        self._prefill_rr = 0                        # round-robin tick cursor
         # per-request causal spans: a request's lifetime crosses scheduler
         # iterations (and the decode launch is shared by every active slot),
         # so these are manual handles closed in _finish with *declared*
-        # attribution — n_launches decode launches + 1 prefill doorbell
+        # attribution — n_launches decode launches + prefill launches
         self._req_spans: Dict[int, SpanHandle] = {}
 
         # live observability plane: every event the (possibly shared)
@@ -235,32 +246,24 @@ class ContinuousBatchingServer(Server):
         self.session.add_sink(self.live)
         self._live_server: Optional[Any] = None
 
-        # Stacked per-slot decode state: leading axis = slot.  Every slot —
-        # free or active — always holds a well-formed batch-1 state, so the
-        # vmapped launch below is total and shape-stable forever.
-        one = self.model.init_decode_state(1, max_seq)
-        self._slots = jax.tree_util.tree_map(
-            lambda x: jnp.stack([x] * self.B), one)
-        self._nxt = jnp.zeros((self.B, 1, 1), jnp.int32)
+        # KV backend: dense (stacked per-slot states, the PR-7 layout) or
+        # paged (global page pool + block tables + shared-prefix reuse).
+        # Unset knobs fall back to the tuned policy for this config.
+        if kv == "paged" and kv_page_tokens is None:
+            kv_page_tokens = int(self.policy.knob("kv_page_tokens", 16)
+                                 if self.policy else 16)
+        if prefill_chunk is None:
+            prefill_chunk = int(self.policy.knob("prefill_chunk", 0)
+                                if self.policy else 0)
+        from .kv import make_kv
+        self.kv = make_kv(self, kv, page_tokens=kv_page_tokens or 16,
+                          pages=kv_pages, prefill_chunk=prefill_chunk)
 
-        def decode_slot(params, state, tok):        # state: batch-1 pytree
-            def body(carry, _):
-                st, t = carry
-                st, logits = self.model.decode_step(params, st, t)
-                nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(t.dtype)
-                return (st, nxt), nxt[0, 0]
-            (state, nxt), toks = jax.lax.scan(
-                body, (state, tok), None, length=self.T)
-            return state, toks, nxt                 # [T], [1, 1]
-
-        self._decode_slots = self.tracker.wrap(
-            jax.jit(jax.vmap(decode_slot, in_axes=(None, 0, 0))),
-            "decode_slots")
-        # scatter one admitted request's prefilled state into its slot
-        self._install = jax.jit(
-            lambda full, part, i: jax.tree_util.tree_map(
-                lambda f, o: jax.lax.dynamic_update_index_in_dim(f, o, i, 0),
-                full, part))
+    @property
+    def _decode_slots(self):
+        """The backend's vmapped decode launch (tests inspect its compile
+        cache to prove shape stability across churn)."""
+        return self.kv._decode_slots
 
     # -- intake (any thread) ----------------------------------------------
     def submit(self, request: Request) -> RequestTicket:
@@ -355,49 +358,93 @@ class ContinuousBatchingServer(Server):
         launches = tix.n_launches
         handle.end(uid=tix.uid, status=tix.status, slot=tix.slot,
                    n_tokens=len(tix.tokens),
-                   doorbells=launches + (1 if tix.t_admit >= 0 else 0),
+                   doorbells=launches + tix.n_prefill_launches,
                    graph_launches=launches,
                    payload=4 * len(tix.tokens))
 
+    def _on_first_token(self, tix: RequestTicket, tok0: int) -> None:
+        """Prefill completed: record token 0, finish degenerate requests."""
+        self._prefilling.discard(tix.slot)
+        tix.tokens.append(tok0)
+        tix.t_first = time.perf_counter()
+        if len(tix.tokens) >= min(tix.request.max_new_tokens, tix.cap):
+            self._finish(tix)           # degenerate 1-token request
+
     def _admit(self) -> int:
-        """Move queued tickets into free slots (prefill + install)."""
+        """Move queued tickets into free slots.
+
+        Whole-prompt admission (no chunking) prefills synchronously here —
+        the pre-refactor behavior.  Prompts longer than the backend's
+        ``prefill_chunk`` only *start* here; :meth:`_prefill_tick` advances
+        them one bounded launch per scheduler iteration so active slots
+        keep decoding underneath.
+        """
         admitted = 0
         for slot in self._free_slots():
-            tix = self.queue.pop()
+            tix = self.queue.pop(self.sched_policy)
             if tix is None:
                 break
             r = tix.request
-            with self.session.span("serve.prefill", uid=tix.uid,
-                                   prompt_len=int(len(r.prompt))):
-                state, logits = self._prefill(
-                    self.params,
-                    jnp.asarray(np.asarray(r.prompt)[None, :]))
-            tok0 = int(jnp.argmax(logits[0, -1, :]))
-            self._slots = self._install(self._slots, state, np.int32(slot))
-            self._nxt = self._nxt.at[slot, 0, 0].set(tok0)
-            tix.tokens.append(tok0)
+            if not self.kv.begin(slot, tix):
+                # page pool exhausted even after reclaiming shared pages
+                tix.status, tix.reason = "evicted", "kv_pages"
+                tix.t_done = time.perf_counter()
+                self.session.emit("progress", "serve.evict", uid=tix.uid,
+                                  reason=tix.reason)
+                self._end_request_span(tix)
+                continue
             tix.status, tix.slot = "active", slot
-            tix.t_admit = tix.t_first = time.perf_counter()
+            tix.t_admit = time.perf_counter()
             # KV capacity: decode token j (0-based; token 0 comes straight
             # from prefill logits) writes cache position prompt_len + j - 1,
             # which must stay below max_seq.
             tix.cap = self.max_seq - len(r.prompt) + 1
             self._slot_tix[slot] = tix
-            self.session.emit("progress", "serve.admit", uid=tix.uid,
-                              slot=slot, queued_s=tix.t_admit - tix.t_submit)
+            self._prefilling.add(slot)
+            chunk = self.kv.chunk
+            if not (chunk and len(r.prompt) > chunk):
+                tok0 = self.kv.prefill_step(slot)   # one whole-prompt launch
+                self.session.emit("progress", "serve.admit", uid=tix.uid,
+                                  slot=slot,
+                                  queued_s=tix.t_admit - tix.t_submit)
+                self._on_first_token(tix, tok0)
+            else:
+                self.session.emit("progress", "serve.admit", uid=tix.uid,
+                                  slot=slot,
+                                  queued_s=tix.t_admit - tix.t_submit)
             admitted += 1
-            if len(tix.tokens) >= min(r.max_new_tokens, tix.cap):
-                self._finish(tix)       # degenerate 1-token request
         return admitted
 
-    def _finish(self, tix: RequestTicket) -> None:
-        evicted = len(tix.tokens) < tix.request.max_new_tokens
+    def _prefill_tick(self) -> None:
+        """Advance at most ONE pending chunked prefill by one launch.
+
+        One bounded launch per scheduler iteration keeps the decode-iter
+        gap under control (the acceptance bar: no gap beyond 2x the median
+        decode-iter duration); round-robin across prefilling slots keeps
+        long prompts from starving each other.
+        """
+        pending = sorted(s for s in self._prefilling
+                         if self._slot_tix[s] is not None)
+        if not pending:
+            return
+        slot = pending[self._prefill_rr % len(pending)]
+        self._prefill_rr += 1
+        tok0 = self.kv.prefill_step(slot)
+        if tok0 is not None:
+            self._on_first_token(self._slot_tix[slot], tok0)
+
+    def _finish(self, tix: RequestTicket, reason: Optional[str] = None
+                ) -> None:
+        evicted = (reason is not None
+                   or len(tix.tokens) < tix.request.max_new_tokens)
         tix.status = "evicted" if evicted else "done"
         if evicted:
-            tix.reason = "kv_overrun"
+            tix.reason = reason or "kv_overrun"
         tix.t_done = time.perf_counter()
         tix.request.tokens = list(tix.tokens)
         self._slot_tix[tix.slot] = None
+        self._prefilling.discard(tix.slot)
+        self.kv.release(tix.slot)
         self.session.emit(
             "progress", "serve.evict" if evicted else "serve.finish",
             payload_bytes=4 * len(tix.tokens), uid=tix.uid, slot=tix.slot,
@@ -406,18 +453,31 @@ class ContinuousBatchingServer(Server):
         self._end_request_span(tix)
 
     def step(self) -> bool:
-        """One scheduler iteration: admit, then one decode launch across
-        all slots; harvest per-slot tokens.  Returns False if idle."""
+        """One scheduler iteration: admit, advance one chunked prefill,
+        then one decode launch across all decodable slots; harvest per-slot
+        tokens.  Returns False if idle."""
         self._admit()
-        if self.n_active == 0:
-            return False
+        self._prefill_tick()
+        decodable = [slot for slot, tix in enumerate(self._slot_tix)
+                     if tix is not None and slot not in self._prefilling]
+        if not decodable:
+            return self.n_active > 0    # prefills pending still count
+        # paged backend: grow block tables for the coming T writes; slots
+        # the pool cannot serve are evicted (reason="kv_pages") and their
+        # freed pages immediately retried for the survivors
+        while True:
+            victims = self.kv.reserve_decode(decodable)
+            if not victims:
+                break
+            for slot in victims:
+                self._finish(self._slot_tix[slot], reason="kv_pages")
+                decodable.remove(slot)
+            if not decodable:
+                return self.n_active > 0
         with self.session.span("serve.decode_iter", active=self.n_active):
-            self._slots, toks, self._nxt = self._decode_slots(
-                self.params, self._slots, self._nxt)
-            blocks = np.asarray(toks)               # [B, T] host sync
-            for slot, tix in enumerate(self._slot_tix):
-                if tix is None:
-                    continue
+            blocks = self.kv.decode()               # [B, T] host sync
+            for slot in decodable:
+                tix = self._slot_tix[slot]
                 tix.n_launches += 1
                 budget = min(tix.request.max_new_tokens, tix.cap)
                 take = min(self.T, budget - len(tix.tokens))
@@ -434,7 +494,11 @@ class ContinuousBatchingServer(Server):
         closed (threaded replay calls :meth:`close_intake` when the
         producer finishes) or nothing has arrived for ``idle_timeout_s``
         (synchronous submit-then-run callers never close the intake).
-        Returns run metrics; per-request detail lives on the tickets.
+        When idle, the loop blocks on the queue's condition variable —
+        :meth:`submit` and :meth:`close_intake` wake it immediately —
+        with ``poll_s`` as the floor fallback timeout instead of the old
+        ``sleep(poll_s)`` spin.  Returns run metrics; per-request detail
+        lives on the tickets.
         """
         t0 = time.perf_counter()
         db0, ev0 = self.tracker.count, self.session.n_events
@@ -451,9 +515,14 @@ class ContinuousBatchingServer(Server):
                     break
                 now = time.perf_counter()
                 idle_since = idle_since if idle_since is not None else now
-                if now - idle_since >= idle_timeout_s:
+                remaining = idle_timeout_s - (now - idle_since)
+                if remaining <= 0:
                     break
-            time.sleep(poll_s)
+                self.queue.wait_for_work(timeout=max(poll_s, remaining))
+            else:
+                # queued work raced in after this iteration's admit pass;
+                # loop around immediately
+                continue
         wall = time.perf_counter() - t0
         tickets = list(self.tickets)
         ended = [t for t in tickets if t.t_done >= t0]
@@ -472,6 +541,9 @@ class ContinuousBatchingServer(Server):
             "tokens_per_doorbell": new_tokens / max(1, doorbells),
             "tokens_per_s": new_tokens / max(wall, 1e-9),
             "trace_events": self.session.n_events - ev0,
+            # backend memory-path accounting (pages, prefix hits, prefill
+            # launches/bytes) — engine-lifetime totals, not per-run deltas
+            "kv": self.kv.stats(),
         }
         # latency percentiles over requests that actually decoded; instant
         # rejections would skew p50 toward zero

@@ -44,6 +44,10 @@ class TrafficSpec:
     prompt_lens: Tuple[int, ...] = (4, 8, 16)
     new_tokens: Tuple[int, ...] = (4, 8, 16)
     seed: int = 0
+    #: tokens of seeded prefix shared by every prompt (0 = independent
+    #: prompts); models system-prompt traffic, the regime where the paged
+    #: KV backend's prefix-page reuse pays off
+    prefix_len: int = 0
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -60,15 +64,18 @@ class Arrival:
 def generate(spec: TrafficSpec, vocab_size: int) -> List[Arrival]:
     """Deterministic schedule: same spec (incl. seed) -> same arrivals."""
     rng = np.random.default_rng(spec.seed)
+    prefix = rng.integers(0, vocab_size, size=spec.prefix_len
+                          ).astype(np.int32)
     arrivals: List[Arrival] = []
     t = 0.0
     for uid in range(spec.n_requests):
         t += float(rng.exponential(1.0 / spec.rate))
         plen = int(rng.choice(spec.prompt_lens))
         budget = int(rng.choice(spec.new_tokens))
-        prompt = rng.integers(0, vocab_size, size=plen).astype(np.int32)
+        suffix = rng.integers(0, vocab_size, size=plen).astype(np.int32)
         arrivals.append(Arrival(t=t, request=Request(
-            uid=uid, prompt=prompt, max_new_tokens=budget)))
+            uid=uid, prompt=np.concatenate([prefix, suffix]),
+            max_new_tokens=budget)))
     return arrivals
 
 

@@ -23,7 +23,9 @@ def main(argv=None) -> None:
                     help="tune the full published config (default: smoke)")
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--workloads", default="dma,serve,train",
-                    help="comma-separated subset of dma,serve,train")
+                    help="comma-separated subset of dma,serve,train,kv "
+                         "(kv tunes the paged backend's kv_page_tokens + "
+                         "prefill_chunk; opt-in)")
     ap.add_argument("--policy-dir", default=None)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--new-tokens", type=int, default=8)

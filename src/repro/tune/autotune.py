@@ -9,7 +9,10 @@ run under a fresh :class:`~repro.core.TraceSession`:
   batch (knob: ``tokens_per_launch``);
 * ``train`` — a smoke :class:`~repro.runtime.trainer.Trainer` run (knob:
   ``steps_per_launch``, the graph capture granularity of the multi-step
-  launcher).
+  launcher);
+* ``kv``    — shared-prefix continuous-batching traffic on the paged KV
+  backend (knobs: ``kv_page_tokens``, ``prefill_chunk``); opt-in via
+  ``--workloads``.
 
 Every workload warms up first (compile + first dispatch) and measures only
 the steady-state summary delta, because that is the regime a persisted
@@ -38,6 +41,10 @@ KNOB_WORKLOADS: Dict[str, Tuple[str, ...]] = {
     "dma": ("dma_threshold_bytes",),
     "serve": ("tokens_per_launch",),
     "train": ("steps_per_launch",),
+    # paged-KV serving path: page granularity and prefill chunking are
+    # coupled (a chunk boundary lands mid-page or not), so one workload
+    # measures both under shared-prefix continuous-batching traffic.
+    "kv": ("kv_page_tokens", "prefill_chunk"),
 }
 
 
@@ -55,6 +62,7 @@ class WorkloadSpec:
     max_seq: int = 64
     serve_mode: str = "oneshot"   # oneshot | continuous
     serve_requests: int = 6       # continuous mode: requests per measurement
+    kv_prefix_len: int = 16       # kv workload: shared prefix tokens
     # train
     train_batch: int = 2
     train_seq: int = 32
@@ -72,13 +80,17 @@ def default_knobs(workloads: Sequence[str]) -> List[Knob]:
     """The exposed submission knobs, as discrete ladders, per workload."""
     from ..core.dma import INLINE_THRESHOLD_DEFAULT
     ladders = {
-        "dma": Knob("dma_threshold_bytes",
-                    (0, 4 * 1024, INLINE_THRESHOLD_DEFAULT, 128 * 1024),
-                    default=INLINE_THRESHOLD_DEFAULT),
-        "serve": Knob("tokens_per_launch", (1, 2, 4, 8), default=1),
-        "train": Knob("steps_per_launch", (1, 2, 4), default=1),
+        "dma": (Knob("dma_threshold_bytes",
+                     (0, 4 * 1024, INLINE_THRESHOLD_DEFAULT, 128 * 1024),
+                     default=INLINE_THRESHOLD_DEFAULT),),
+        "serve": (Knob("tokens_per_launch", (1, 2, 4, 8), default=1),),
+        "train": (Knob("steps_per_launch", (1, 2, 4), default=1),),
+        # page-size ladder must divide the workload max_seq (64); chunk 0
+        # means whole-prompt prefill (the chunking-off baseline).
+        "kv": (Knob("kv_page_tokens", (4, 8, 16, 32), default=16),
+               Knob("prefill_chunk", (0, 4, 8, 16), default=0)),
     }
-    return [ladders[w] for w in workloads]
+    return [k for w in workloads for k in ladders[w]]
 
 
 class CandidateEvaluator:
@@ -177,6 +189,39 @@ class CandidateEvaluator:
                                      tokens=out["new_tokens"])
         return m
 
+    def _measure_kv(self, knobs: Dict[str, Any]) -> Metrics:
+        """Score page size + prefill chunking on the paged backend under
+        shared-prefix traffic — the regime where both knobs matter: page
+        granularity sets how much of the common prefix is reusable, and
+        the chunk bound trades prefill latency against decode stalls."""
+        from ..core.session import TraceSession
+        from ..runtime.server import ContinuousBatchingServer
+        from ..runtime.traffic import TrafficSpec, generate, replay
+        spec = self.spec
+        tspec = TrafficSpec(n_requests=spec.serve_requests, rate=1000.0,
+                            prompt_lens=(spec.prompt_len,),
+                            new_tokens=(spec.new_tokens,), seed=spec.seed,
+                            prefix_len=spec.kv_prefix_len)
+        with TraceSession(name="tune_kv") as sess:
+            # tokens_per_launch is pinned (not read from ``knobs``): it is
+            # not in this workload's cache key, so reading it would serve
+            # stale measurements when the serve workload tunes it.
+            eng = ContinuousBatchingServer(
+                self.cfg, batch_size=spec.batch, max_seq=spec.max_seq,
+                tokens_per_launch=4,
+                seed=spec.seed, session=sess, kv="paged",
+                kv_page_tokens=int(knobs["kv_page_tokens"]),
+                prefill_chunk=int(knobs["prefill_chunk"]))
+            # warm: compiles the paged decode + extend kernels
+            replay(eng, generate(tspec, self.cfg.vocab_size),
+                   realtime=False)
+            before = sess.summary()
+            _, out = replay(eng, generate(tspec, self.cfg.vocab_size),
+                            realtime=False)
+            m = metrics_from_summary(sess.summary(), before,
+                                     tokens=out["new_tokens"])
+        return m
+
     def _measure_train(self, knobs: Dict[str, Any]) -> Metrics:
         from ..configs.shapes import ShapeConfig
         from ..core.session import TraceSession
@@ -195,7 +240,7 @@ class CandidateEvaluator:
         return m
 
     _MEASURE = {"dma": _measure_dma, "serve": _measure_serve,
-                "train": _measure_train}
+                "train": _measure_train, "kv": _measure_kv}
 
     # -- evaluation --------------------------------------------------------
     def measure(self, workload: str, knobs: Dict[str, Any]) -> Metrics:
