@@ -424,15 +424,21 @@ class PagedKV(KVCacheManager):
             pg = self._page_of.get(chain[p])
             if pg is None:
                 break
+            # pin BEFORE allocating: a refcount-0 shared page sits in
+            # self._cached, which _take_pages reclaims under pool pressure
+            # — left unpinned, the same physical page could be handed back
+            # as a fresh prefill target and the prefill would clobber the
+            # shared prefix content
+            if self._ref[pg] == 0:
+                self._cached.pop(pg, None)
+            self._ref[pg] += 1
             shared.append(pg)
         n_total = -(-plen // self.pt)                # pages covering prompt
         got = self._take_pages(n_total - len(shared))
         if got is None:
+            for pg in shared:                        # unpin: roll back
+                self._drop_ref(pg)
             return False
-        for pg in shared:
-            if self._ref[pg] == 0:
-                self._cached.pop(pg, None)
-            self._ref[pg] += 1
         for pg in got:
             self._ref[pg] += 1
         self.tables[slot, :n_total] = shared + got
@@ -484,9 +490,17 @@ class PagedKV(KVCacheManager):
         tix.n_prefill_launches += 1
         if p["pos"] < plen:
             return None
-        # prompt fully in cache: register shareable pages, go decodable
+        # prompt fully in cache: register shareable pages, go decodable.
+        # Pages overlapping [max_seq - T, max_seq) are excluded: a slot
+        # finishing at the KV cap scatter-writes its clamped decode rows
+        # there (scatter_block_rows start = min(length, S - T)), and a
+        # registered page must stay immutable once other requests attach
+        # to it — reachable when page_tokens < tokens_per_launch (the
+        # tuner ladder offers page_tokens=4 against T=8).
         chain = self._chain[slot]
-        for i in range(plen // self.pt):
+        n_reg = min(plen // self.pt,
+                    (eng.max_seq - eng.T) // self.pt)
+        for i in range(n_reg):
             self._register(int(self.tables[slot, i]), chain[i])
         tok0 = int(jnp.argmax(logits[0, -1, :]))
         self.lengths[slot] = plen

@@ -111,6 +111,13 @@ class SchedulerPolicy:
     def note_admitted(self, ticket: "RequestTicket") -> None:
         pass
 
+    def note_finished(self, ticket: "RequestTicket") -> None:
+        """Called when an admitted ticket reaches a terminal state, so
+        stateful policies can reconcile admission-time estimates against
+        what the request actually consumed.  No-op for tickets that never
+        passed through :meth:`note_admitted`."""
+        pass
+
 
 class FifoPolicy(SchedulerPolicy):
     """Strict arrival order — the pre-policy behavior."""
@@ -135,29 +142,60 @@ class PriorityPolicy(SchedulerPolicy):
 class FairSharePolicy(SchedulerPolicy):
     """Least-served ``Request.user`` first; FIFO within a user.
 
-    "Served" is the decode-token budget admitted so far, so a user
-    submitting a few huge requests does not starve one submitting many
-    small ones.
+    "Served" is charged as the decode-token *budget* at admission (so
+    fairness reacts before any token is generated), then reconciled to
+    the tokens actually emitted when the request finishes — a request
+    evicted after a few tokens does not permanently bill its user for
+    output it never received.  The per-user ledger is bounded: past
+    ``max_users`` distinct users, the least-recently-active entry with no
+    in-flight request is evicted, so long-running servers with churny
+    user strings do not grow state without bound.
     """
 
     name = "fair"
 
-    def __init__(self) -> None:
-        self._served: Dict[str, int] = {}
+    def __init__(self, max_users: int = 1024) -> None:
+        self.max_users = int(max_users)
+        # user -> tokens served, ordered by last activity (LRU eviction)
+        self._served: "collections.OrderedDict[str, int]" = \
+            collections.OrderedDict()
+        self._inflight: Dict[int, Tuple[str, int]] = {}  # uid->(user,charge)
+
+    @staticmethod
+    def _user(request: Any) -> str:
+        return str(getattr(request, "user", ""))
 
     def select(self, queued: Sequence["RequestTicket"]) -> int:
         best, best_cost = 0, None
         for i, t in enumerate(queued):
-            user = str(getattr(t.request, "user", ""))
-            cost = self._served.get(user, 0)
+            cost = self._served.get(self._user(t.request), 0)
             if best_cost is None or cost < best_cost:
                 best, best_cost = i, cost
         return best
 
+    def _charge(self, user: str, amount: int) -> None:
+        self._served[user] = self._served.get(user, 0) + amount
+        self._served.move_to_end(user)
+        while len(self._served) > self.max_users:
+            live = {u for u, _ in self._inflight.values()}
+            stale = next((u for u in self._served
+                          if u != user and u not in live), None)
+            if stale is None:
+                break
+            del self._served[stale]
+
     def note_admitted(self, ticket: "RequestTicket") -> None:
-        user = str(getattr(ticket.request, "user", ""))
-        cost = int(getattr(ticket.request, "max_new_tokens", 1))
-        self._served[user] = self._served.get(user, 0) + cost
+        user = self._user(ticket.request)
+        est = int(getattr(ticket.request, "max_new_tokens", 1))
+        self._inflight[ticket.uid] = (user, est)
+        self._charge(user, est)
+
+    def note_finished(self, ticket: "RequestTicket") -> None:
+        entry = self._inflight.pop(ticket.uid, None)
+        if entry is None:
+            return
+        user, est = entry
+        self._charge(user, len(ticket.tokens) - est)
 
 
 SCHED_POLICIES = ("fifo", "priority", "fair")

@@ -256,8 +256,12 @@ class ContinuousBatchingServer(Server):
             prefill_chunk = int(self.policy.knob("prefill_chunk", 0)
                                 if self.policy else 0)
         from .kv import make_kv
-        self.kv = make_kv(self, kv, page_tokens=kv_page_tokens or 16,
-                          pages=kv_pages, prefill_chunk=prefill_chunk)
+        # None -> default; explicit invalid values (e.g. 0) must reach
+        # kv_geometry's validation instead of being silently coerced
+        self.kv = make_kv(
+            self, kv,
+            page_tokens=16 if kv_page_tokens is None else kv_page_tokens,
+            pages=kv_pages, prefill_chunk=prefill_chunk)
 
     @property
     def _decode_slots(self):
@@ -392,6 +396,7 @@ class ContinuousBatchingServer(Server):
                 self.session.emit("progress", "serve.evict", uid=tix.uid,
                                   reason=tix.reason)
                 self._end_request_span(tix)
+                self.sched_policy.note_finished(tix)
                 continue
             tix.status, tix.slot = "active", slot
             tix.t_admit = time.perf_counter()
@@ -451,6 +456,7 @@ class ContinuousBatchingServer(Server):
             tokens=len(tix.tokens), latency_s=tix.latency_s,
             **({"reason": tix.reason} if evicted else {}))
         self._end_request_span(tix)
+        self.sched_policy.note_finished(tix)
 
     def step(self) -> bool:
         """One scheduler iteration: admit, advance one chunked prefill,

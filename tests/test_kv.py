@@ -128,6 +128,15 @@ def test_pool_smaller_than_one_slot_rejected():
                                  kv_page_tokens=8, kv_pages=4)
 
 
+def test_explicit_zero_page_tokens_rejected():
+    # an explicit 0 must reach kv_geometry's validation, not silently
+    # coerce to the default
+    with pytest.raises(ValueError, match="positive"):
+        ContinuousBatchingServer(CFG, batch_size=1, max_seq=64,
+                                 tokens_per_launch=2, seed=0,
+                                 kv="paged", kv_page_tokens=0)
+
+
 # -- shared-prefix page reuse -----------------------------------------------
 
 def _shared_prefix_requests(n=8, prefix_len=24, suffix_len=8, budget=6):
@@ -167,6 +176,113 @@ def test_shared_prefix_reuses_pages_and_shrinks_prefill():
     names = [e.name for e in sink.events if e.kind == "progress"]
     assert names.count("kv.prefix_hit") == kv["prefix_hits"]
     assert "kv.alloc" in names and "kv.free" in names
+
+
+def test_shared_prefix_pinned_under_pool_pressure():
+    """Regression: shared prefix pages must be pinned *before* fresh pages
+    are allocated.  A refcount-0 shared page sits in the reclaimable cache,
+    and under pool pressure ``_take_pages`` used to reclaim it and hand it
+    back as a prefill target for the very request attaching to it — the
+    block table then held the same physical page twice and prefill clobbered
+    the shared prefix."""
+    eng = ContinuousBatchingServer(CFG, batch_size=1, max_seq=64,
+                                   tokens_per_launch=2, seed=0,
+                                   kv="paged", kv_page_tokens=8, kv_pages=8)
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, CFG.vocab_size, 24).astype(np.int32)
+
+    def mk(n):
+        return rng.integers(0, CFG.vocab_size, n).astype(np.int32)
+
+    # A fills the whole 8-page pool (4-page prompt + decode growth to the
+    # cap), then releases: its 4 prompt pages stay cached, 4 go free
+    eng.submit(Request(uid=0, prompt=np.concatenate([prefix, mk(8)]),
+                       max_new_tokens=31))
+    eng.run(idle_timeout_s=0.0)
+    kv = eng.kv
+    assert len(kv._cached) == 4 and len(kv._free) == 4
+
+    # B shares the 3-page prefix and needs 5 fresh pages — one more than
+    # the free list holds, forcing a reclaim from the cache while the
+    # shared pages sit there at refcount 0
+    b = RequestTicket(request=Request(
+        uid=1, prompt=np.concatenate([prefix, mk(40)]), max_new_tokens=1))
+    assert kv.begin(0, b)
+    table = kv.tables[0, :int(kv.n_rows[0])].tolist()
+    assert len(set(table)) == len(table)      # no physical page twice
+    assert all(kv._ref[p] == 1 for p in table)
+    assert kv.pages_reused == 3
+
+    # rollback: with the free list exhausted and every reclaimable page
+    # pinned as shared prefix, begin must fail AND undo its pins
+    kv.release(0)
+    kv._free.clear()
+    c = RequestTicket(request=Request(
+        uid=2, prompt=np.concatenate([prefix, mk(40)]), max_new_tokens=1))
+    assert not kv.begin(0, c)
+    assert len(kv._cached) == 3               # prefix pages reclaimable again
+    assert all(kv._ref[p] == 0 for p in kv._cached)
+
+
+def test_shared_prefix_under_pressure_tokens_match_dense():
+    """End-to-end cover for the pin-before-allocate fix: prefix sharing and
+    pool pressure *together* (each was covered separately before) must stay
+    bit-identical to dense."""
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(0, CFG.vocab_size, 24).astype(np.int32)
+
+    def reqs():
+        r = np.random.default_rng(13)
+
+        def mk(n):
+            return r.integers(0, CFG.vocab_size, n).astype(np.int32)
+
+        return [Request(uid=0, prompt=np.concatenate([prefix, mk(8)]),
+                        max_new_tokens=31),
+                Request(uid=1, prompt=np.concatenate([prefix, mk(40)]),
+                        max_new_tokens=1),
+                Request(uid=2, prompt=np.concatenate([prefix, mk(8)]),
+                        max_new_tokens=4)]
+
+    def run(**kw):
+        eng = ContinuousBatchingServer(CFG, batch_size=1, max_seq=64,
+                                       tokens_per_launch=2, seed=0, **kw)
+        tix = [eng.submit(r) for r in reqs()]
+        eng.run(idle_timeout_s=0.0)
+        return {t.uid: list(t.tokens) for t in tix}, eng
+
+    d_toks, _ = run()
+    p_toks, eng = run(kv="paged", kv_page_tokens=8, kv_pages=8)
+    assert p_toks == d_toks
+    assert eng.kv.prefix_hits == 2            # both followers attached
+    assert all(t.status in ("done",) for t in eng.tickets)
+
+
+def test_no_registration_in_clamped_decode_write_zone():
+    """Pages overlapping [max_seq - T, max_seq) are never registered for
+    sharing: a slot finishing at the KV cap scatter-writes its clamped
+    decode rows there, and registered pages must stay immutable once other
+    requests attach (reachable with page_tokens < tokens_per_launch)."""
+    def run(**kw):
+        eng = ContinuousBatchingServer(CFG, batch_size=1, max_seq=64,
+                                       tokens_per_launch=8, seed=0, **kw)
+        rng = np.random.default_rng(21)
+        base = rng.integers(0, CFG.vocab_size, 60).astype(np.int32)
+        ext = rng.integers(0, CFG.vocab_size, 4).astype(np.int32)
+        tix = [eng.submit(Request(uid=0, prompt=base, max_new_tokens=5)),
+               eng.submit(Request(uid=1, prompt=np.concatenate([base, ext]),
+                                  max_new_tokens=1))]
+        eng.run(idle_timeout_s=0.0)
+        return {t.uid: list(t.tokens) for t in tix}, eng
+
+    d_toks, _ = run()
+    p_toks, eng = run(kv="paged", kv_page_tokens=4)
+    assert p_toks == d_toks
+    # A's 60-token prompt fully covers 15 pages, but page 14 spans
+    # [56, 60) inside the clamp zone [56, 64) — only 14 get registered
+    assert len(eng.kv._key_of) == 14
+    # the follower still shares all 14 safe pages
+    assert eng.kv.prefix_hits == 1 and eng.kv.pages_reused == 14
 
 
 def test_traffic_prefix_len_prepends_shared_prefix():
@@ -292,6 +408,29 @@ def test_fair_share_policy_balances_users():
     # after user a's 100-token request, user b is least-served until its
     # cumulative budget catches up — so b gets both small requests next
     assert order == [0, 2, 3, 1]
+
+
+def test_fair_share_reconciles_actual_tokens_on_finish():
+    pol = FairSharePolicy()
+    (t,) = _tickets((0, 0, "a", 100))
+    pol.note_admitted(t)
+    assert pol._served["a"] == 100      # budget charged up front
+    t.tokens = [7, 7, 7]                # evicted after only 3 real tokens
+    pol.note_finished(t)
+    assert pol._served["a"] == 3        # reconciled to actual usage
+    (u,) = _tickets((1, 0, "b", 5))
+    pol.note_finished(u)                # never admitted: no-op
+    assert "b" not in pol._served
+
+
+def test_fair_share_ledger_bounded():
+    pol = FairSharePolicy(max_users=2)
+    for t in _tickets(*[(i, 0, f"u{i}", 1) for i in range(5)]):
+        pol.note_admitted(t)
+        t.tokens = [1]
+        pol.note_finished(t)
+    assert len(pol._served) <= 2        # churny users don't grow state
+    assert not pol._inflight
 
 
 def test_make_policy_names_and_unknown():
